@@ -1,0 +1,124 @@
+"""Shared benchmark infrastructure.
+
+The paper prunes *pretrained* models; offline we train small same-family
+models on the synthetic Zipf-Markov corpus once, checkpoint them under
+results/bench_models/<arch>/, and reuse them across every table/figure.
+A trained model is essential: pruning an untrained net shows no
+perplexity signal (masks of random weights are exchangeable).
+
+Bench configs are the tiny test configs scaled up enough that 60%
+pruning visibly hurts and refinement visibly helps (d_model 128+,
+trained to ppl << vocab-uniform).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+import repro.models as models
+from repro import ckpt, pruning
+from repro.core import masks as masks_lib
+from repro.train import steps as steps_lib
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results"
+MODELS_DIR = RESULTS / "bench_models"
+
+# benchmark corpus/eval protocol (shared by all tables)
+CALIB_SAMPLES = 32
+CALIB_SEQ = 128
+CALIB_BATCH = 8
+EVAL_BATCHES = 6
+EVAL_BATCH = 16
+EVAL_SEQ = 128
+TRAIN_STEPS = 600
+TRAIN_BATCH = 16
+TRAIN_SEQ = 128
+
+
+def bench_config(arch: str):
+    """Tiny config scaled to benchmark size (trainable on CPU in minutes)."""
+    tiny = configs.get_tiny(arch)
+    kw = dict(d_model=128, d_ff=3 * 128, n_layers=4, vocab_size=512,
+              dtype="float32")
+    if tiny.n_heads:
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = max(1, min(tiny.n_kv_heads, 2))
+        kw["d_head"] = 32
+    if tiny.is_rwkv:
+        kw["rwkv_head_dim"] = 32
+    if tiny.is_moe:
+        kw["d_ff"] = 128
+    if tiny.family == "hybrid":
+        kw["ssm_head_dim"] = 32
+    if tiny.is_encdec:
+        kw["n_enc_layers"] = 2
+        kw.update(n_layers=2)
+    if tiny.cross_attn_every:
+        kw.update(n_layers=4, cross_attn_every=2, n_img_tokens=16)
+    return tiny.replace(**kw)
+
+
+def trained_model(arch: str, *, steps: int = TRAIN_STEPS, verbose=True):
+    """Train-once-and-cache. Returns (cfg, api, params)."""
+    cfg = _install_bench_config(arch)
+    api = models.build(cfg)
+    ckpt_dir = MODELS_DIR / arch
+    latest = ckpt.latest_valid(ckpt_dir)
+    shape = jax.eval_shape(lambda: steps_lib.init_state(
+        api, jax.random.key(0)))
+    if latest is not None and latest >= steps:
+        state, _ = ckpt.restore(ckpt_dir, latest, shape)
+        return cfg, api, state.params
+    if verbose:
+        print(f"  [bench] training {arch} for {steps} steps ...")
+    from repro.launch.train import train
+    out = train(arch, tiny=True, n_steps=steps, batch=TRAIN_BATCH,
+                seq=TRAIN_SEQ, ckpt_dir=str(ckpt_dir), ckpt_every=steps,
+                lr=2e-3, verbose=False)
+    return cfg, api, out["state"].params
+
+
+# train() above uses configs.get_tiny; patch the bench config in by name
+def _install_bench_config(arch: str):
+    cfg = bench_config(arch)
+    configs.TINY[configs.get(arch).name] = cfg
+    return cfg
+
+
+def setup(arch: str, *, steps: int = TRAIN_STEPS, verbose=True):
+    """The standard benchmark fixture: bench config + trained params +
+    calibration taps + eval batches."""
+    _install_bench_config(arch)
+    cfg, api, params = trained_model(arch, steps=steps, verbose=verbose)
+    batches = list(pruning.calibration_batches(
+        cfg, n_samples=CALIB_SAMPLES, seq_len=CALIB_SEQ,
+        batch_size=CALIB_BATCH))
+    taps = pruning.accumulate(api, params, batches)
+    return cfg, api, params, taps
+
+
+def evaluate(api, params, masks=None) -> dict:
+    return pruning.evaluate(api, params, masks=masks,
+                            n_batches=EVAL_BATCHES, batch=EVAL_BATCH,
+                            seq=EVAL_SEQ)
+
+
+def parse_pattern(p: str) -> masks_lib.Pattern:
+    if ":" in p:
+        n, m = p.split(":")
+        return masks_lib.NM(int(n), int(m))
+    return masks_lib.PerRow(float(p))
+
+
+def save_table(name: str, data, *, fmt: str | None = None):
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / f"{name}.json"
+    out.write_text(json.dumps(data, indent=1, default=float))
+    if fmt:
+        print(fmt)
+    return out

@@ -1,0 +1,47 @@
+"""Paper Figure 2: perplexity vs number of calibration samples.
+
+Reproduction targets: more samples help both Wanda and SparseSwaps; the
+Gram matrix G has fixed size d_in x d_in regardless of B (we assert the
+tap state size is sample-count independent).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import pruning
+
+from . import common
+
+
+def run(arch: str = "llama31-8b", sample_counts=(2, 8, 32, 64),
+        sparsity: str = "0.6", t_max: int = 50, verbose: bool = True) -> dict:
+    cfg, api, params, _ = common.setup(arch, verbose=verbose)
+    pat = common.parse_pattern(sparsity)
+    rows = []
+    state_bytes = None
+    for n in sample_counts:
+        batches = list(pruning.calibration_batches(
+            cfg, n_samples=n, seq_len=common.CALIB_SEQ,
+            batch_size=min(n, common.CALIB_BATCH)))
+        taps = pruning.accumulate(api, params, batches)
+        nbytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(taps))
+        if state_bytes is None:
+            state_bytes = nbytes
+        assert nbytes == state_bytes, "Gram state must not grow with B"
+        for method in ("none", "sparseswaps"):
+            rep = pruning.prune_model(api, params, None, pat, method=method,
+                                      warmstart="wanda", t_max=t_max,
+                                      taps=taps)
+            ev = common.evaluate(api, params, masks=rep.masks)
+            rows.append({"arch": arch, "n_samples": n, "method": method,
+                         "ppl": ev["perplexity"],
+                         "err_reduction": rep.mean_error_reduction()})
+            if verbose:
+                print(f"  n={n:3d} {method:12s} ppl {ev['perplexity']:8.2f}")
+    common.save_table("fig2_samples", rows)
+    return {"rows": rows, "gram_state_bytes": state_bytes}
+
+
+if __name__ == "__main__":
+    run()

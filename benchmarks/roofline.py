@@ -1,0 +1,63 @@
+"""Roofline table: reads the dry-run artifacts (results/dryrun/*) and
+prints the per-(arch x shape x mesh) three-term roofline (DESIGN §7).
+
+Run ``python -m repro.launch.dryrun`` first (or use the committed
+artifacts). This is the §Roofline deliverable renderer; EXPERIMENTS.md
+embeds its output.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def load(mesh: str) -> list[dict]:
+    d = DRYRUN / mesh
+    if not d.exists():
+        return []
+    rows = []
+    for f in sorted(d.glob("*.json")):
+        data = json.loads(f.read_text())
+        if data.get("ok"):
+            rows.append(data)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    rf = r["roofline"]
+    mem = (r["arg_bytes"] + r["temp_bytes"]) / 2**30
+    return (f"{r['arch']:22s} {r['cell']:12s} "
+            f"{rf['compute_s']:9.3f} {rf['memory_s']:9.3f} "
+            f"{rf['ici_s']:9.3f} {rf['dcn_s']:8.3f}  "
+            f"{rf['dominant'][:-2]:>7s} {100*rf['compute_fraction']:5.1f}% "
+            f"{rf['useful_flops_ratio']:6.2f} {mem:8.2f}")
+
+
+HEADER = (f"{'arch':22s} {'cell':12s} {'compute_s':>9s} {'memory_s':>9s} "
+          f"{'ici_s':>9s} {'dcn_s':>8s}  {'bound':>7s} {'cmp%':>5s} "
+          f"{'useful':>6s} {'GiB/dev':>8s}")
+
+
+def run(verbose: bool = True) -> dict:
+    out = {}
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        out[mesh] = rows
+        if verbose and rows:
+            print(f"\n=== mesh {mesh} ({len(rows)} cells) ===")
+            print(HEADER)
+            for r in rows:
+                print(fmt_row(r))
+    if verbose and out.get("16x16"):
+        worst = min(out["16x16"], key=lambda r: r["roofline"]["compute_fraction"])
+        print(f"\nworst compute-fraction cell: {worst['arch']} "
+              f"{worst['cell']} "
+              f"({100*worst['roofline']['compute_fraction']:.1f}%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper table/figure at CPU scale (trained small models on the
+synthetic corpus; relative orderings are the reproduction targets) plus
+the roofline table from the dry-run artifacts. ``--quick`` trims iteration
+counts for smoke use; ``--only tableN`` runs one.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig1_per_layer, fig2_samples, roofline, table1_methods,
+               table2_magnitude, table3_iterations, table4_warmstart,
+               table5_wallclock)
+
+ALL = {
+    "table1": lambda q: table1_methods.run(
+        archs=("llama31-8b",) if q else ("llama31-8b", "chatglm3-6b"),
+        t_max=10 if q else 50),
+    "table2": lambda q: table2_magnitude.run(t_max=10 if q else 50),
+    "table3": lambda q: table3_iterations.run(
+        iters=(0, 1, 5, 25) if q else table3_iterations.ITERS),
+    "table4": lambda q: table4_warmstart.run(
+        archs=("llama31-8b",) if q else ("llama31-8b", "chatglm3-6b"),
+        t_max=10 if q else 50),
+    "table5": lambda q: table5_wallclock.run(
+        iters=(0, 1, 5) if q else (0, 1, 2, 5, 10, 25)),
+    "fig1": lambda q: fig1_per_layer.run(t_max=25 if q else 100),
+    "fig2": lambda q: fig2_samples.run(
+        sample_counts=(2, 16) if q else (2, 8, 32, 64),
+        t_max=10 if q else 50),
+    "roofline": lambda q: roofline.run(),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=sorted(ALL))
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(ALL)
+    t00 = time.time()
+    for name in names:
+        print(f"\n========== {name} ==========")
+        t0 = time.time()
+        ALL[name](args.quick)
+        print(f"[{name} done in {time.time()-t0:.0f}s]")
+    print(f"\nall benchmarks done in {time.time()-t00:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table 1: perplexity + zero-shot accuracy across methods.
+
+Warmstarts (Wanda, RIA) x refinements (none, DSnoT, SparseSwaps) at 60%
+unstructured (per-row) and 2:4 semi-structured sparsity, across
+architectures. Reproduction targets (relative orderings, not absolute
+numbers — synthetic corpus, small models):
+  * SparseSwaps improves ppl/acc over its warmstart;
+  * SparseSwaps >= DSnoT.
+"""
+from __future__ import annotations
+
+from repro import pruning
+
+from . import common
+
+
+def run(archs=("llama31-8b", "chatglm3-6b"), patterns=("0.6", "2:4"),
+        t_max: int = 50, verbose: bool = True) -> dict:
+    rows = []
+    for arch in archs:
+        cfg, api, params, taps = common.setup(arch, verbose=verbose)
+        dense = common.evaluate(api, params)
+        for pat_s in patterns:
+            pat = common.parse_pattern(pat_s)
+            for warm in ("wanda", "ria"):
+                for method, label in (("none", warm),
+                                      ("dsnot", f"{warm}+DSnoT"),
+                                      ("sparseswaps", f"{warm}+SparseSwaps")):
+                    rep = pruning.prune_model(
+                        api, params, None, pat, method=method,
+                        warmstart=warm, t_max=t_max, taps=taps)
+                    ev = common.evaluate(api, params, masks=rep.masks)
+                    rows.append({
+                        "arch": arch, "pattern": pat_s, "method": label,
+                        "ppl": ev["perplexity"], "acc": ev["accuracy"],
+                        "err_reduction": rep.mean_error_reduction(),
+                        "dense_ppl": dense["perplexity"],
+                        "dense_acc": dense["accuracy"],
+                    })
+                    if verbose:
+                        print(f"  {arch:14s} {pat_s:4s} {label:20s} "
+                              f"ppl {ev['perplexity']:8.2f}  "
+                              f"acc {100*ev['accuracy']:5.2f}%  "
+                              f"err-red {100*rep.mean_error_reduction():5.1f}%")
+    common.save_table("table1_methods", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

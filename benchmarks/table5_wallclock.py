@@ -1,0 +1,42 @@
+"""Paper Table 5: wall-clock time vs T_max.
+
+The T=0 baseline includes calibration sampling, Wanda pruning and Gram
+computation (as in the paper); each additional iteration adds a roughly
+linear overhead. Absolute numbers are CPU-host numbers; the shape of the
+curve (linear in T_max) is the reproduction target.
+"""
+from __future__ import annotations
+
+import time
+
+from repro import pruning
+
+from . import common
+
+
+def run(arch: str = "llama31-8b", iters=(0, 1, 2, 5, 10, 25),
+        verbose: bool = True) -> dict:
+    cfg, api, params, _ = common.setup(arch, verbose=verbose)
+    rows = []
+    for t in iters:
+        t0 = time.time()
+        batches = list(pruning.calibration_batches(
+            cfg, n_samples=common.CALIB_SAMPLES, seq_len=common.CALIB_SEQ,
+            batch_size=common.CALIB_BATCH))
+        taps = pruning.accumulate(api, params, batches)
+        method = "none" if t == 0 else "sparseswaps"
+        rep = pruning.prune_model(api, params, None,
+                                  common.parse_pattern("0.6"),
+                                  method=method, warmstart="wanda",
+                                  t_max=max(t, 1), taps=taps)
+        common.evaluate(api, params, masks=rep.masks)
+        wall = time.time() - t0
+        rows.append({"arch": arch, "t_max": t, "wall_s": wall})
+        if verbose:
+            print(f"  T={t:3d}  wall {wall:6.1f}s")
+    common.save_table("table5_wallclock", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

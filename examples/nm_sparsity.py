@@ -1,0 +1,37 @@
+"""N:M semi-structured sparsity: 2:4 and 4:8 refinement within blocks.
+
+    PYTHONPATH=src python examples/nm_sparsity.py
+
+The paper restricts swaps to the same M-block for N:M patterns (§2.2) —
+only the block-diagonal of G is needed, making N:M refinement cheaper
+than unstructured. This example compares 2:4 vs 4:8 vs per-row 50% on the
+same layer and verifies hardware-pattern feasibility after every swap.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import masks, objective, sparseswaps
+from repro.core.warmstart import warmstart_mask
+
+rng = np.random.default_rng(7)
+d_out, d_in, B = 128, 256, 2048
+mix = np.eye(d_in) + 0.3 * rng.normal(size=(d_in, d_in))
+X = (mix @ rng.normal(size=(d_in, B))).astype(np.float32)
+W = jnp.asarray(rng.normal(size=(d_out, d_in)).astype(np.float32))
+G = jnp.asarray(X @ X.T)
+
+print(f"{'pattern':12s} {'wanda loss':>12s} {'+swaps':>12s} {'reduction':>10s}")
+for pat in (masks.NM(2, 4), masks.NM(4, 8), masks.PerRow(0.5)):
+    m0 = warmstart_mask(W, G, pat, "wanda")
+    l0 = float(objective.layer_loss(W, m0, G))
+    res = sparseswaps.refine(W, G, m0, pat, t_max=50)
+    l1 = float(objective.layer_loss(W, res.mask, G))
+    assert masks.validate_mask(res.mask, pat), pat
+    print(f"{pat.describe():12s} {l0:12.1f} {l1:12.1f} "
+          f"{100*(1-l1/l0):9.1f}%")
+
+print("\nall masks satisfy their hardware pattern exactly "
+      "(block counts verified)")
+print("note: wider blocks (4:8) and per-row 50% give the optimizer more "
+      "freedom -> larger reductions, matching the paper's structure-vs-"
+      "quality trade-off")

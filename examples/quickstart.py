@@ -1,0 +1,44 @@
+"""Quickstart: SparseSwaps on a single layer, from scratch, in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the paper's core loop on one weight matrix: build the Gram
+matrix from calibration activations, warmstart with Wanda, refine with
+exact 1-swaps, and watch the true layer-wise loss drop monotonically.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import masks, objective, sparseswaps
+from repro.core.warmstart import warmstart_mask
+
+rng = np.random.default_rng(0)
+
+# a layer: W (d_out x d_in), calibration activations X (d_in x B)
+d_out, d_in, B = 256, 512, 4096
+mix = np.eye(d_in) + 0.25 * rng.normal(size=(d_in, d_in))   # correlated feats
+X = (mix @ rng.normal(size=(d_in, B))).astype(np.float32)
+W = rng.normal(size=(d_out, d_in)).astype(np.float32)
+
+# Gram matrix — the ONLY calibration state SparseSwaps needs (paper §2.1.2)
+G = jnp.asarray(X @ X.T)
+
+pattern = masks.PerRow(0.6)                 # 60% unstructured (per-row)
+m_wanda = warmstart_mask(jnp.asarray(W), G, pattern, criterion="wanda")
+loss_wanda = float(objective.layer_loss(jnp.asarray(W), m_wanda, G))
+
+result = sparseswaps.refine(jnp.asarray(W), G, m_wanda, pattern,
+                            t_max=100, track_history=True)
+loss_swaps = float(objective.layer_loss(jnp.asarray(W), result.mask, G))
+
+print(f"layer loss  ‖WX−(M⊙W)X‖²:")
+print(f"  Wanda warmstart : {loss_wanda:12.1f}")
+print(f"  + SparseSwaps   : {loss_swaps:12.1f} "
+      f"({100*(1-loss_swaps/loss_wanda):.1f}% lower)")
+print(f"  swaps accepted  : {int(result.swaps.sum())} "
+      f"across {d_out} rows")
+hist = np.asarray(result.history)
+print(f"  monotone?       : {bool(np.all(np.diff(hist) <= 1e-3))} "
+      f"(mean row loss {hist[0]:.1f} -> {hist[-1]:.1f})")
+assert masks.validate_mask(result.mask, pattern)
+print("  mask feasible   : True (exactly 60% pruned per row)")

@@ -1,0 +1,50 @@
+"""Serve a pruned model: batched prefill + decode with mask-aware matmuls.
+
+    PYTHONPATH=src python examples/serve_sparse.py
+
+Prunes a small model with SparseSwaps, then serves a batch of prompts
+through the prefill/decode path (the same code the decode_* dry-run cells
+lower at 32k/500k scale) and verifies the sparse model streams tokens.
+"""
+import time
+
+import jax
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks as masks_lib
+from repro.data import synthetic
+from repro.train import steps as steps_lib
+
+
+def main():
+    cfg = configs.get_tiny("llama31-8b").replace(d_model=128, d_ff=384,
+                                                 n_layers=4, n_heads=4,
+                                                 n_kv_heads=2, d_head=32,
+                                                 dtype="float32")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+
+    print("pruning to 2:4 semi-structured sparsity ...")
+    batches = list(pruning.calibration_batches(cfg, n_samples=8,
+                                               seq_len=64, batch_size=4))
+    rep = pruning.prune_model(api, params, batches, masks_lib.NM(2, 4),
+                              method="sparseswaps", t_max=25)
+    print(f"  mean error reduction over Wanda: "
+          f"{100*rep.mean_error_reduction():.1f}%")
+
+    print("serving a batch of 8 prompts (prefill + 24 decode steps) ...")
+    pipe = synthetic.DataPipeline(synthetic.CorpusConfig(cfg.vocab_size),
+                                  8, 32, split="val")
+    prompt = pipe.get(0)
+    t0 = time.time()
+    toks = steps_lib.greedy_decode(api, params, prompt, 24, masks=rep.masks)
+    dt = time.time() - t0
+    print(f"  generated {toks.shape[0]}x{toks.shape[1]} tokens "
+          f"in {dt:.2f}s ({toks.size/dt:.0f} tok/s, sparse model)")
+    print(f"  sample continuation: {toks[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Atomic sharded checkpointing with elastic restore."""
+from .store import gc, latest_valid, restore, save, steps, validate
+
+__all__ = ["gc", "latest_valid", "restore", "save", "steps", "validate"]

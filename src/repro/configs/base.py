@@ -1,0 +1,171 @@
+"""Architecture config schema + shape-cell definitions.
+
+One ``ArchConfig`` covers every assigned family (dense / moe / ssm / vlm /
+audio / hybrid); family-specific fields default to None/0 and the model
+registry (``repro.models.build``) dispatches on ``family``.
+
+Shape cells (assigned): each architecture is exercised on
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+    decode_32k   seq 32,768  global_batch 128   -> serve decode (1 new token,
+                                                  KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     -> long-context decode; only
+                 sub-quadratic archs run it (SSM / hybrid / SWA) — pure
+                 full-attention archs skip it (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "vlm", "audio", "hybrid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    # --- identity ------------------------------------------------------
+    name: str
+    family: Family
+
+    # --- transformer backbone -------------------------------------------
+    n_layers: int
+    d_model: int
+    n_heads: int                       # 0 for attn-free (rwkv)
+    n_kv_heads: int = 0
+    d_head: int = 0                    # 0 -> d_model // n_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    mlp: Literal["gated", "plain"] = "gated"
+    act: str = "silu"
+    qkv_bias: bool = False
+    rope_pct: float = 1.0              # fraction of head dim rotated (chatglm: 0.5)
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    sliding_window: int = 0            # 0 = full attention; >0 = SWA (mixtral)
+
+    # --- MoE -------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+
+    # --- SSM (mamba2 / zamba hybrid) --------------------------------------
+    ssm_state: int = 0                 # d_state
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 64                # SSD chunk length (matmul-form)
+    shared_attn_every: int = 0         # zamba: shared attn block cadence
+
+    # --- rwkv6 -------------------------------------------------------------
+    rwkv_head_dim: int = 0             # >0 selects the rwkv6 time-mix family
+    rwkv_chunk: int = 16               # chunked-WKV chunk length
+    rwkv_lora_decay: int = 64
+    rwkv_lora_mix: int = 32
+
+    # --- vlm / audio frontends (stubs per the shape spec) -------------------
+    cross_attn_every: int = 0          # vlm: every k-th layer is cross-attn
+    n_img_tokens: int = 1600           # precomputed patch embeddings
+    d_frontend: int = 0                # frontend embedding dim (0 -> d_model)
+
+    # --- enc-dec (seamless) -------------------------------------------------
+    n_enc_layers: int = 0              # >0 selects encoder-decoder
+    n_src_frames: int = 1024           # precomputed audio-frame embeddings
+
+    # --- execution knobs (static; shape- or runtime-selected) ---------------
+    attn_impl: Literal["full", "chunked"] = "full"
+    attn_q_chunk: int = 1024           # q-chunk for chunked (online-softmax) attn
+    head_chunk: int = 0                # 0 = unchunked CE head; >0 = seq chunk
+    remat: bool = True
+    scan_layers: bool = True
+    grad_accum: int = 1                # microbatches per step (train memory)
+    dtype: str = "bfloat16"            # compute/param dtype ("float32" on CPU tests)
+    moe_parallelism: Literal["tp", "ep", "local"] = "tp"  # local: repl.
+                                       # tiny experts; tokens data-par
+    fsdp_params: bool = True           # shard params/opt over data axis
+    moe_group_size: int = 0            # dispatch-group tokens (0 = full seq)
+    long_window: int = 4096            # KV window for long-context serving (SWA)
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def is_rwkv(self) -> bool:
+        return self.rwkv_head_dim > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Total parameter count (embeddings included)."""
+        from repro.models import param_count
+
+        return param_count(self)
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: top_k of n_experts)."""
+        from repro.models import param_count
+
+        return param_count(self, active_only=True)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# shape cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# Archs with sub-quadratic decode (SSM state / SWA window) run long_500k.
+SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-7b", "mixtral-8x7b"}
+
+
+def shape_cells(cfg: ArchConfig) -> list[ShapeCell]:
+    """The shape cells this arch runs (long_500k only if sub-quadratic)."""
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.name in SUBQUADRATIC:
+        cells.append(SHAPES["long_500k"])
+    return cells
+
+
+def cell_skips(cfg: ArchConfig) -> list[tuple[ShapeCell, str]]:
+    """Cells this arch skips, with the reason (recorded in the dry-run table)."""
+    if cfg.name in SUBQUADRATIC:
+        return []
+    return [(SHAPES["long_500k"], "full-attention (quadratic decode)")]

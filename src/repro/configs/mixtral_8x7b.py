@@ -1,0 +1,36 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2, SWA
+[arXiv:2401.04088; hf]
+
+SWA (window 4096) bounds the decode KV cache, which is why this arch runs
+the long_500k cell (rolling-window cache of cfg.long_window).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    mlp="gated",
+    act="silu",
+    sliding_window=4096,
+    n_experts=8,
+    top_k=2,
+    # NOTE: moe_group_size=256 was measured a REGRESSION here (ICI +21%):
+    # seq-aligned dispatch pays off for fine-grained experts (granite-moe,
+    # d_ff=512) but mixtral's d_ff=14336 experts want f-dim TP. See
+    # EXPERIMENTS.md §Perf cell B, "scale-out check".
+    grad_accum=2,             # fits train_4k in 16 GB HBM
+)
+
+TINY = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=256, n_experts=4, top_k=2, sliding_window=16,
+    dtype="float32",
+)

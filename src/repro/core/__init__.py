@@ -1,0 +1,16 @@
+"""Core of the paper: SparseSwaps mask refinement + the baselines it builds on."""
+from .masks import NM, Pattern, PerRow, make_mask, validate_mask
+from .gram import GramState, feature_norms, init_gram, update_from_acts
+from .warmstart import warmstart_mask
+from .sparseswaps import RefineResult, refine, refine_layer
+from .objective import layer_loss, layer_loss_direct, relative_error_reduction
+from .dsnot import dsnot
+from .sparsegpt import sparsegpt
+
+__all__ = [
+    "NM", "Pattern", "PerRow", "make_mask", "validate_mask",
+    "GramState", "feature_norms", "init_gram", "update_from_acts",
+    "warmstart_mask", "RefineResult", "refine", "refine_layer",
+    "layer_loss", "layer_loss_direct", "relative_error_reduction",
+    "dsnot", "sparsegpt",
+]

@@ -1,0 +1,117 @@
+"""DSnoT baseline (Zhang et al., 2024b — "Dynamic Sparse No Training").
+
+The comparison method in the paper: iterative prune-and-regrow driven by
+*surrogate* statistics (per-feature means/variances of the calibration
+activations) instead of the exact Gram loss. As the paper notes, DSnoT does
+NOT guarantee a monotone decrease of the true pruning error — SparseSwaps
+does. We implement the method faithfully in structure:
+
+* per-row expected reconstruction residual  e = Σ_{j pruned} w_j μ_j
+* grow step: re-activate the pruned j whose contribution w_j μ_j best
+  cancels e (sign-aware), variance-regularized as in the original
+  (score = w_j μ_j / sqrt(var_j + δ));
+* prune step: among kept j whose removal moves e toward zero, drop the one
+  with the smallest Wanda-style saliency |w_j|·sqrt(E[x_j²]);
+* stop when |e| no longer improves or after ``t_max`` cycles.
+
+Swaps preserve per-row (or within-block N:M) sparsity exactly, so DSnoT and
+SparseSwaps refine the same feasible set and are directly comparable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import masks as masks_lib
+
+_DELTA = 1e-8
+_INF = jnp.float32(jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("t_max", "block"))
+def _dsnot_rows(w, m0, mu, var, ex2, *, t_max: int, block: int | None):
+    """w, m0: (R, d); mu/var/ex2: (d,) feature stats."""
+    R, d = w.shape
+    w = w.astype(jnp.float32)
+
+    def residual(m):
+        return jnp.sum((1.0 - m) * w * mu[None, :], axis=1)  # (R,)
+
+    wanda = jnp.abs(w) * jnp.sqrt(jnp.maximum(ex2, 0.0))[None, :]
+    contrib = w * mu[None, :]                     # w_j μ_j, (R, d)
+    reg = contrib / jnp.sqrt(var + _DELTA)[None, :]
+
+    if block is not None:
+        nb = d // block
+        blk_ids = jnp.repeat(jnp.arange(nb), block)  # (d,)
+
+    def body(state):
+        m, e, t, alive = state
+        # --- grow: pruned j minimizing |e - w_j μ_j| (variance-regularized)
+        cancel = jnp.abs(e[:, None] - contrib) + _DELTA * jnp.abs(reg)
+        cancel = jnp.where(m < 0.5, cancel, _INF)
+        grow = jnp.argmin(cancel, axis=1)                        # (R,)
+        if block is not None:
+            grow_blk = blk_ids[grow]
+        # --- prune: kept j, removal must move e toward 0, min Wanda score
+        e_after_grow = e - jnp.take_along_axis(contrib, grow[:, None], 1)[:, 0]
+        moves_toward = jnp.abs(e_after_grow[:, None] + contrib) <= jnp.abs(
+            e_after_grow[:, None]
+        ) + _DELTA
+        score = jnp.where((m > 0.5) & moves_toward, wanda, _INF)
+        # fallback: if nothing moves toward zero, allow any kept weight
+        score = jnp.where(
+            jnp.all(jnp.isinf(score), axis=1, keepdims=True),
+            jnp.where(m > 0.5, wanda, _INF),
+            score,
+        )
+        if block is not None:
+            same_blk = blk_ids[None, :] == grow_blk[:, None]
+            score = jnp.where(same_blk, score, _INF)
+        prune = jnp.argmin(score, axis=1)
+        ok = ~jnp.isinf(jnp.take_along_axis(score, prune[:, None], 1)[:, 0])
+
+        e_new = e_after_grow + jnp.take_along_axis(contrib, prune[:, None], 1)[:, 0]
+        improves = (jnp.abs(e_new) < jnp.abs(e)) & ok
+        rows = jnp.arange(R)
+        m_new = m.at[rows, grow].set(1.0).at[rows, prune].set(0.0)
+        m = jnp.where(improves[:, None], m_new, m)
+        e = jnp.where(improves, e_new, e)
+        return m, e, t + 1, jnp.any(improves)
+
+    def cond(state):
+        _, _, t, alive = state
+        return (t < t_max) & alive
+
+    m, _, _, _ = jax.lax.while_loop(
+        cond, body, (m0.astype(jnp.float32), residual(m0), jnp.int32(0), jnp.bool_(True))
+    )
+    return m
+
+
+def dsnot(
+    W: jnp.ndarray,
+    mask_init: jnp.ndarray,
+    mu: jnp.ndarray,
+    var: jnp.ndarray,
+    ex2: jnp.ndarray,
+    pattern: masks_lib.Pattern,
+    *,
+    t_max: int = 50,
+    row_block: int | None = None,
+) -> jnp.ndarray:
+    """Refine ``mask_init`` with DSnoT. ex2 = E[x_j²] (Wanda scale²)."""
+    d_out, d_in = W.shape
+    blk = pattern.block(d_in)
+    rb = row_block or d_out
+    outs = []
+    for lo in range(0, d_out, rb):
+        hi = min(lo + rb, d_out)
+        outs.append(
+            _dsnot_rows(
+                W[lo:hi], mask_init[lo:hi], mu, var, ex2, t_max=t_max, block=blk
+            )
+        )
+    return jnp.concatenate(outs, axis=0)

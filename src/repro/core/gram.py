@@ -1,0 +1,103 @@
+"""Streaming Gram-matrix accumulation (paper §2.1.2).
+
+G = X Xᵀ ∈ R^{d_in × d_in} is accumulated on the fly as calibration batches
+pass through a layer: G += X_chunk X_chunkᵀ, fp32 accumulation regardless of
+input dtype (bf16 activations on TPU). X here follows the paper layout
+(d_in, B); callers with (B, d_in) activations use ``update_from_acts``.
+
+Also provides:
+* per-feature activation norms ‖X_{j,:}‖₂ (the Wanda scale) — recoverable as
+  sqrt(diag(G)), so no extra state is needed;
+* DSnoT's feature means/variances, which DO need extra streaming state;
+* the distributed accumulator (psum over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def init_gram(d_in: int) -> jnp.ndarray:
+    return jnp.zeros((d_in, d_in), jnp.float32)
+
+
+def update(G: jnp.ndarray, x_chunk: jnp.ndarray) -> jnp.ndarray:
+    """G += X Xᵀ for a (d_in, b) chunk."""
+    x = x_chunk.astype(jnp.float32)
+    return G + x @ x.T
+
+
+def update_from_acts(G: jnp.ndarray, acts: jnp.ndarray) -> jnp.ndarray:
+    """Accumulate from activations laid out (..., tokens, d_in)."""
+    x = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+    return G + x.T @ x
+
+
+def feature_norms(G: jnp.ndarray) -> jnp.ndarray:
+    """‖X_{j,:}‖₂ per input feature = sqrt(G_jj)."""
+    return jnp.sqrt(jnp.clip(jnp.diagonal(G), 0.0, None))
+
+
+@dataclasses.dataclass
+class GramState:
+    """Streaming state for one linear layer's calibration statistics."""
+
+    G: jnp.ndarray           # (d_in, d_in) fp32
+    count: jnp.ndarray       # scalar token count
+    mean: jnp.ndarray        # (d_in,) running feature mean   (for DSnoT)
+    m2: jnp.ndarray          # (d_in,) running sum of squared deviations
+
+    @staticmethod
+    def create(d_in: int) -> "GramState":
+        return GramState(
+            G=init_gram(d_in),
+            count=jnp.zeros((), jnp.float32),
+            mean=jnp.zeros((d_in,), jnp.float32),
+            m2=jnp.zeros((d_in,), jnp.float32),
+        )
+
+    def update(self, acts: jnp.ndarray) -> "GramState":
+        """Chan et al. parallel-variance merge of a (…, tokens, d_in) chunk."""
+        x = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+        nb = jnp.float32(x.shape[0])
+        G = self.G + x.T @ x
+        mean_b = jnp.mean(x, axis=0)
+        m2_b = jnp.sum((x - mean_b) ** 2, axis=0)
+        delta = mean_b - self.mean
+        tot = self.count + nb
+        safe_tot = jnp.maximum(tot, 1.0)
+        mean = self.mean + delta * nb / safe_tot
+        m2 = self.m2 + m2_b + delta * delta * self.count * nb / safe_tot
+        return GramState(G=G, count=tot, mean=mean, m2=m2)
+
+    @property
+    def variance(self) -> jnp.ndarray:
+        return self.m2 / jnp.maximum(self.count, 1.0)
+
+
+jax.tree_util.register_pytree_node(
+    GramState,
+    lambda s: ((s.G, s.count, s.mean, s.m2), None),
+    lambda _, c: GramState(*c),
+)
+
+
+def psum_gram(state: GramState, axis_name) -> GramState:
+    """Combine per-device partial Gram statistics across the data axis.
+
+    Correct because G, count, Σx and Σ(x-μ)² decompositions are additive:
+    we re-derive the merged mean/m2 from psum'd raw moments.
+    """
+    sum_x = state.mean * state.count
+    sum_sq_dev_plus = state.m2 + state.count * state.mean**2  # = Σ x²
+    G = jax.lax.psum(state.G, axis_name)
+    count = jax.lax.psum(state.count, axis_name)
+    sum_x = jax.lax.psum(sum_x, axis_name)
+    sum_x2 = jax.lax.psum(sum_sq_dev_plus, axis_name)
+    safe = jnp.maximum(count, 1.0)
+    mean = sum_x / safe
+    m2 = sum_x2 - count * mean**2
+    return GramState(G=G, count=count, mean=mean, m2=m2)

@@ -1,0 +1,121 @@
+"""Sparsity patterns and mask utilities.
+
+Masks follow the paper's convention: ``m == 1`` keeps a weight, ``m == 0``
+prunes it. Two pattern families, both row-separable (paper §2.1.1):
+
+* ``PerRow(k)`` — keep exactly k weights in every row ("unstructured" with
+  equal per-row sparsity, as Wanda enforces).
+* ``NM(n, m)`` — keep n out of every m consecutive weights (semi-structured,
+  e.g. 2:4), Mishra et al. 2021.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PerRow:
+    """Keep exactly ``keep`` weights per row (or a ``sparsity`` fraction)."""
+
+    sparsity: float  # fraction pruned, e.g. 0.6
+
+    def keep_per_row(self, d_in: int) -> int:
+        return d_in - int(round(self.sparsity * d_in))
+
+    def block(self, d_in: int) -> int | None:
+        return None
+
+    def describe(self) -> str:
+        return f"per-row {self.sparsity:.0%}"
+
+
+@dataclasses.dataclass(frozen=True)
+class NM:
+    """N:M semi-structured sparsity — keep n per block of m."""
+
+    n: int
+    m: int
+
+    def keep_per_row(self, d_in: int) -> int:
+        if d_in % self.m:
+            raise ValueError(f"d_in={d_in} not divisible by M={self.m}")
+        return d_in // self.m * self.n
+
+    def block(self, d_in: int) -> int | None:
+        return self.m
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.n / self.m
+
+    def describe(self) -> str:
+        return f"{self.n}:{self.m}"
+
+
+Pattern = PerRow | NM
+
+
+def topk_mask_per_row(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Keep the ``keep`` highest-score entries per row. (R, d) -> float mask."""
+    d = scores.shape[-1]
+    if keep >= d:
+        return jnp.ones_like(scores, dtype=jnp.float32)
+    if keep <= 0:
+        return jnp.zeros_like(scores, dtype=jnp.float32)
+    # threshold = keep-th largest per row
+    kth = -jnp.sort(-scores, axis=-1)[..., keep - 1 : keep]
+    mask = scores >= kth
+    # Tie-break: if ties inflate the count, drop surplus deterministically
+    # (lowest index wins among tied entries).
+    surplus = jnp.sum(mask, axis=-1, keepdims=True) - keep
+    tied = (scores == kth) & mask
+    tie_rank = jnp.cumsum(tied, axis=-1)  # 1-based rank among tied entries
+    n_tied = jnp.sum(tied, axis=-1, keepdims=True)
+    drop = tied & (tie_rank > (n_tied - surplus))
+    return (mask & ~drop).astype(jnp.float32)
+
+
+def topk_mask_nm(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Keep the n highest-score entries in each length-m block per row."""
+    *lead, d = scores.shape
+    nb = d // m
+    s = scores.reshape(*lead, nb, m)
+    kth = -jnp.sort(-s, axis=-1)[..., n - 1 : n]
+    mask = s >= kth
+    surplus = jnp.sum(mask, axis=-1, keepdims=True) - n
+    tied = (s == kth) & mask
+    tie_rank = jnp.cumsum(tied, axis=-1)
+    n_tied = jnp.sum(tied, axis=-1, keepdims=True)
+    drop = tied & (tie_rank > (n_tied - surplus))
+    return (mask & ~drop).astype(jnp.float32).reshape(*lead, d)
+
+
+def make_mask(scores: jnp.ndarray, pattern: Pattern) -> jnp.ndarray:
+    """Build a warmstart mask from saliency scores (higher = keep)."""
+    d_in = scores.shape[-1]
+    if isinstance(pattern, NM):
+        return topk_mask_nm(scores, pattern.n, pattern.m)
+    return topk_mask_per_row(scores, pattern.keep_per_row(d_in))
+
+
+def validate_mask(mask: jnp.ndarray, pattern: Pattern) -> bool:
+    """Check a mask satisfies the pattern's constraints exactly."""
+    d_in = mask.shape[-1]
+    keep = pattern.keep_per_row(d_in)
+    per_row = jnp.sum(mask, axis=-1)
+    if not bool(jnp.all(per_row == keep)):
+        return False
+    blk = pattern.block(d_in)
+    if blk is not None:
+        nb = d_in // blk
+        per_block = jnp.sum(mask.reshape(*mask.shape[:-1], nb, blk), axis=-1)
+        if not bool(jnp.all(per_block == pattern.n)):
+            return False
+    return True
+
+
+def sparsity_of(mask: jnp.ndarray) -> float:
+    return float(1.0 - jnp.mean(mask))

@@ -1,0 +1,23 @@
+"""Exact layer-wise pruning objective (paper Eq. 1) and error metrics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import swap_math as sm
+
+
+def layer_loss(W: jnp.ndarray, M: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """‖WX − (M⊙W)X‖_F² computed through G (scalar)."""
+    return jnp.sum(sm.row_loss(W, M, G))
+
+
+def layer_loss_direct(W: jnp.ndarray, M: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Same objective straight from X (d_in, B) — used to test the Gram path."""
+    E = (W - M * W).astype(jnp.float32) @ X.astype(jnp.float32)
+    return jnp.sum(E * E)
+
+
+def relative_error_reduction(loss_before: jnp.ndarray, loss_after: jnp.ndarray) -> jnp.ndarray:
+    """Mean relative per-row reduction, as reported in paper Tables 3/4."""
+    denom = jnp.maximum(loss_before, 1e-30)
+    return jnp.mean((loss_before - loss_after) / denom)

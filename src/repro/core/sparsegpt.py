@@ -1,0 +1,112 @@
+"""SparseGPT baseline (Frantar & Alistarh, 2023), pure-JAX.
+
+OBS-style one-shot pruning *with weight updates*: per column j (processed
+left-to-right in blocks), prune the lowest-score weights
+(score = w_j² / [H⁻¹]_jj) and distribute the error onto the not-yet-
+processed columns via the inverse-Hessian row. Unlike SparseSwaps this
+mutates surviving weights, so layers must be pruned sequentially when the
+calibration inputs are re-derived; with a fixed dense calibration pass
+(Wanda-style, what the paper and this repo use) it is still a valid
+mask+update baseline per layer.
+
+H = G + λ·mean(diag(G))·I (standard 1% dampening). Columns are processed in
+one jax.lax.scan (vectorized over rows); the mask respects per-row-k
+(approximated block-wise, as in the original: the per-block prune count is
+exact, global per-row count is exact when d_in % blocksize == 0) or N:M.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import masks as masks_lib
+
+
+def _inv_hessian_chol(G: jnp.ndarray, damp: float = 0.01) -> jnp.ndarray:
+    """Upper Cholesky factor of H⁻¹ (the quantity SparseGPT iterates with)."""
+    d = G.shape[0]
+    mean_diag = jnp.mean(jnp.diagonal(G))
+    H = G.astype(jnp.float32) + damp * mean_diag * jnp.eye(d, dtype=jnp.float32)
+    Hinv = jnp.linalg.inv(H)
+    # upper Cholesky factor U with Hinv = Uᵀ U (torch.linalg.cholesky upper=True,
+    # exactly what GPTQ/SparseGPT iterate with)
+    return jnp.linalg.cholesky(Hinv).T
+
+
+@partial(jax.jit, static_argnames=("blocksize", "keep_frac_num", "keep_frac_den", "nm_n", "nm_m"))
+def _sparsegpt_core(W, G, *, blocksize: int, keep_frac_num: int, keep_frac_den: int,
+                    nm_n: int, nm_m: int):
+    d_out, d_in = W.shape
+    U = _inv_hessian_chol(G)                      # (d, d) upper
+    W = W.astype(jnp.float32)
+
+    nb = d_in // blocksize
+
+    def process_block(carry, bi):
+        W_cur, M = carry
+        cols = bi * blocksize + jnp.arange(blocksize)
+        Wb = W_cur[:, cols]                                      # (d_out, bs) via gather
+        Ub = U[cols][:, cols]                                    # (bs, bs) block of U
+        diag = jnp.diagonal(Ub)                                  # [H^-1]_jj^0.5 factors
+        # mask selection within the block
+        score = (Wb / diag[None, :]) ** 2
+        if nm_m > 0:
+            mb = masks_lib.topk_mask_nm(score, nm_n, nm_m)
+        else:
+            keep_b = blocksize * keep_frac_num // keep_frac_den
+            mb = masks_lib.topk_mask_per_row(score, keep_b)
+
+        # sequential column sweep inside the block (OBS error propagation)
+        def col_step(wb, j):
+            w_j = wb[:, j]
+            q = w_j * (1.0 - mb[:, j])                           # pruned part
+            err = q / Ub[j, j]
+            # update remaining columns in block: wb[:, j+1:] -= err * Ub[j, j+1:]
+            upd = err[:, None] * Ub[j][None, :]
+            keep_cols = (jnp.arange(blocksize) > j).astype(jnp.float32)
+            wb = wb - upd * keep_cols[None, :]
+            wb = wb.at[:, j].set(w_j * mb[:, j])
+            return wb, err
+
+        wb, errs = jax.lax.scan(col_step, Wb, jnp.arange(blocksize))
+        # propagate block error to all later columns: W[:, later] -= E @ U[block, later]
+        Ublk_rest = U[cols]                                      # (bs, d_in)
+        later = (jnp.arange(d_in) >= (bi + 1) * blocksize).astype(jnp.float32)
+        E = errs.T                                               # (d_out, bs)
+        W_cur = W_cur - (E @ Ublk_rest) * later[None, :]
+        W_cur = W_cur.at[:, cols].set(wb)
+        M = M.at[:, cols].set(mb)
+        return (W_cur, M), None
+
+    (W_out, M_out), _ = jax.lax.scan(
+        process_block, (W, jnp.ones_like(W)), jnp.arange(nb)
+    )
+    return W_out, M_out
+
+
+def sparsegpt(
+    W: jnp.ndarray,
+    G: jnp.ndarray,
+    pattern: masks_lib.Pattern,
+    *,
+    blocksize: int = 128,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (updated weights, mask). Weights already have the mask applied."""
+    d_out, d_in = W.shape
+    blocksize = min(blocksize, d_in)
+    if d_in % blocksize:
+        raise ValueError(f"d_in={d_in} must be divisible by blocksize={blocksize}")
+    if isinstance(pattern, masks_lib.NM):
+        nm_n, nm_m = pattern.n, pattern.m
+        kf = (1, 1)
+    else:
+        nm_n = nm_m = 0
+        # express keep fraction as an exact rational to stay static under jit
+        keep = pattern.keep_per_row(d_in)
+        kf = (keep, d_in)
+    return _sparsegpt_core(
+        W, G, blocksize=blocksize, keep_frac_num=kf[0], keep_frac_den=kf[1],
+        nm_n=nm_n, nm_m=nm_m,
+    )

@@ -1,0 +1,183 @@
+"""Exact 1-swap cost algebra from the paper (§2.1.3).
+
+Everything here is pure jnp and row-batched: a "row block" is `w, m, c` of
+shape (R, d_in) plus the shared Gram matrix G (d_in, d_in). These functions
+are the single source of truth for the swap formulas; the Pallas kernels in
+``repro.kernels`` and the distributed paths reuse them (or are tested
+against them).
+
+Notation (paper Eq. 5/6):
+    a_u = 2 w_u c_u + w_u^2 G_uu          cost of re-activating... no —
+                                          cost contribution of *pruning* kept u
+    b_p = -2 w_p c_p + w_p^2 G_pp         contribution of *unpruning* pruned p
+    dL[u, p] = a_u + b_p - 2 w_u w_p G_up
+
+A mask entry m_j == 1 means the weight is KEPT (unpruned), m_j == 0 pruned,
+matching the paper. A swap (u, p) prunes kept index u and keeps pruned
+index p, preserving the per-row sparsity level.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INVALID = jnp.float32(jnp.inf)  # sentinel for masked-out candidates
+
+
+def correlation_vector(w: jnp.ndarray, m: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """c = G ((1 - m) ⊙ w), row-batched.
+
+    w, m: (R, d_in); G: (d_in, d_in) -> c: (R, d_in), fp32.
+    """
+    wp = ((1.0 - m) * w).astype(jnp.float32)
+    return wp @ G.astype(jnp.float32).T  # G symmetric; .T keeps layout intent
+
+
+def row_loss(w: jnp.ndarray, m: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """Exact per-row loss L = (w - m⊙w)^T G (w - m⊙w). (R,)."""
+    wp = ((1.0 - m) * w).astype(jnp.float32)
+    return jnp.einsum("ri,ij,rj->r", wp, G.astype(jnp.float32), wp)
+
+
+def swap_scores(w: jnp.ndarray, m: jnp.ndarray, c: jnp.ndarray, g_diag: jnp.ndarray):
+    """Per-index swap half-costs (a, b) with infeasible entries pushed to +inf.
+
+    a[r, u]: cost term for pruning currently-kept u   (valid where m==1)
+    b[r, p]: cost term for unpruning currently-pruned p (valid where m==0)
+    """
+    w = w.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    quad = (w * w) * g_diag.astype(jnp.float32)
+    a = 2.0 * w * c + quad
+    b = -2.0 * w * c + quad
+    a = jnp.where(m > 0.5, a, NEG_INVALID)
+    b = jnp.where(m > 0.5, NEG_INVALID, b)
+    return a, b
+
+
+def delta_matrix(w, m, c, G):
+    """Full ΔL[r, u, p] matrix (reference path — O(R d_in²) memory).
+
+    Infeasible pairs (u not kept, p not pruned) are +inf.
+    """
+    g_diag = jnp.diagonal(G)
+    a, b = swap_scores(w, m, c, g_diag)
+    w32 = w.astype(jnp.float32)
+    inter = 2.0 * jnp.einsum("ru,rp,up->rup", w32, w32, G.astype(jnp.float32))
+    return a[:, :, None] + b[:, None, :] - inter
+
+
+def best_swap_dense(w, m, c, G):
+    """Jointly-best (ΔL*, u*, p*) per row via the dense ΔL matrix.
+
+    Returns (dl, u_idx, p_idx) with shapes (R,), (R,), (R,).
+    Reference implementation; production uses the chunked/Pallas paths.
+    """
+    dl = delta_matrix(w, m, c, G)
+    R, d, _ = dl.shape
+    flat = dl.reshape(R, d * d)
+    idx = jnp.argmin(flat, axis=1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    return best, idx // d, idx % d
+
+
+def best_swap_chunked(w, m, c, G, *, chunk: int = 512):
+    """Memory-lean jointly-best swap: stream over p-column chunks of G.
+
+    For each chunk of pruned candidates p, reduce over all u on the fly:
+    memory O(R * chunk) instead of O(R * d_in²). Pure jnp (works on any
+    backend); the Pallas kernel implements the same contraction tiled for
+    VMEM.
+    """
+    d_in = G.shape[0]
+    g_diag = jnp.diagonal(G)
+    a, b = swap_scores(w, m, c, g_diag)  # (R, d)
+    w32 = w.astype(jnp.float32)
+    nchunks = (d_in + chunk - 1) // chunk
+    pad = nchunks * chunk - d_in
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        Gp = jnp.pad(G.astype(jnp.float32), ((0, 0), (0, pad)))
+        wp = jnp.pad(w32, ((0, 0), (0, pad)))
+    else:
+        Gp, wp = G.astype(jnp.float32), w32
+
+    best = jnp.full((w.shape[0],), jnp.inf, jnp.float32)
+    best_u = jnp.zeros((w.shape[0],), jnp.int32)
+    best_p = jnp.zeros((w.shape[0],), jnp.int32)
+    # fori-style python loop: nchunks is static, so this unrolls in jit.
+    for ci in range(nchunks):
+        sl = slice(ci * chunk, (ci + 1) * chunk)
+        Gc = Gp[:, sl]                       # (d, chunk)
+        # ΔL[r, u, p] for this chunk = a[r,u] + b[r,p] - 2 w_u w_p G_up
+        inter = 2.0 * jnp.einsum("ru,rp,up->rup", w32, wp[:, sl], Gc)
+        dl = a[:, :, None] + b[:, sl][:, None, :] - inter  # (R, d, chunk)
+        flat = dl.reshape(dl.shape[0], -1)
+        idx = jnp.argmin(flat, axis=1)
+        val = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+        u_i = (idx // chunk).astype(jnp.int32)
+        p_i = (idx % chunk + ci * chunk).astype(jnp.int32)
+        upd = val < best
+        best = jnp.where(upd, val, best)
+        best_u = jnp.where(upd, u_i, best_u)
+        best_p = jnp.where(upd, p_i, best_p)
+    return best, best_u, best_p
+
+
+def best_swap_nm(w, m, c, G, *, block: int):
+    """Best within-block swap for N:M sparsity (paper §2.2).
+
+    Swaps are restricted to the same M-block, so only the block-diagonal of
+    G is needed: O(d_in · block) per row instead of O(d_in²).
+    """
+    R, d_in = w.shape
+    nb = d_in // block
+    g_diag = jnp.diagonal(G)
+    a, b = swap_scores(w, m, c, g_diag)            # (R, d)
+    a = a.reshape(R, nb, block)
+    b = b.reshape(R, nb, block)
+    w32 = w.astype(jnp.float32).reshape(R, nb, block)
+    # Block-diagonal gather of G: (nb, block, block)
+    Gb = _block_diag(G, block)
+    inter = 2.0 * jnp.einsum("rnu,rnp,nup->rnup", w32, w32, Gb)
+    dl = a[..., :, None] + b[..., None, :] - inter  # (R, nb, block, block)
+    flat = dl.reshape(R, nb * block * block)
+    idx = jnp.argmin(flat, axis=1)
+    val = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    blk = idx // (block * block)
+    rem = idx % (block * block)
+    u_i = (blk * block + rem // block).astype(jnp.int32)
+    p_i = (blk * block + rem % block).astype(jnp.int32)
+    return val, u_i, p_i
+
+
+def _block_diag(G: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Extract (nb, block, block) block-diagonal of G."""
+    d = G.shape[0]
+    nb = d // block
+    G4 = G.astype(jnp.float32).reshape(nb, block, nb, block)
+    idx = jnp.arange(nb)
+    return G4[idx, :, idx, :]
+
+
+def apply_swap(w, m, c, G, dl, u_idx, p_idx, *, eps: float = 0.0):
+    """Apply accepted swaps row-batched; rows with dl >= -eps are no-ops.
+
+    Returns (m', c', accepted) — Eq. 6 correlation update:
+        c ← c + w_u G_{:,u} − w_p G_{:,p}
+    """
+    accepted = dl < -eps
+    R, d_in = m.shape
+    rows = jnp.arange(R)
+    G32 = G.astype(jnp.float32)
+    gu = G32[:, u_idx].T  # (R, d_in) columns G_{:, u*}
+    gp = G32[:, p_idx].T
+    wu = jnp.take_along_axis(w, u_idx[:, None], axis=1)[:, 0].astype(jnp.float32)
+    wp = jnp.take_along_axis(w, p_idx[:, None], axis=1)[:, 0].astype(jnp.float32)
+    c_new = c + wu[:, None] * gu - wp[:, None] * gp
+    m_new = m.at[rows, u_idx].set(0.0).at[rows, p_idx].set(1.0)
+    acc = accepted[:, None]
+    return (
+        jnp.where(acc, m_new, m),
+        jnp.where(acc, c_new, c),
+        accepted,
+    )

@@ -1,0 +1,63 @@
+"""Warmstart pruning criteria: magnitude, Wanda, RIA.
+
+Each criterion maps (W, gram-stats) -> saliency scores (higher = keep),
+then ``masks.make_mask`` applies the sparsity pattern. SparseSwaps is
+warmstart-agnostic (paper Table 4); these are the three the paper uses.
+
+* magnitude  — |W|                                  (Han et al., 2015)
+* Wanda      — |W| · ‖X_j‖₂                         (Sun et al., 2024);
+               derived in the paper as the Jensen upper bound of the exact
+               row objective (Eq. 4) — tested in tests/test_warmstart.py.
+* RIA        — relative importance + activations    (Zhang et al., 2024a):
+               (|W_ij| / Σ_row|W_i·| + |W_ij| / Σ_col|W_·j|) · (‖X_j‖₂)^a,
+               a = 0.5 by default.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import masks as masks_lib
+
+
+def magnitude_scores(W: jnp.ndarray, G: jnp.ndarray | None = None) -> jnp.ndarray:
+    return jnp.abs(W.astype(jnp.float32))
+
+
+def wanda_scores(W: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    from .gram import feature_norms
+
+    return jnp.abs(W.astype(jnp.float32)) * feature_norms(G)[None, :]
+
+
+def ria_scores(W: jnp.ndarray, G: jnp.ndarray, *, a: float = 0.5) -> jnp.ndarray:
+    from .gram import feature_norms
+
+    aw = jnp.abs(W.astype(jnp.float32))
+    row_sum = jnp.sum(aw, axis=1, keepdims=True)
+    col_sum = jnp.sum(aw, axis=0, keepdims=True)
+    ri = aw / jnp.maximum(row_sum, 1e-12) + aw / jnp.maximum(col_sum, 1e-12)
+    return ri * feature_norms(G)[None, :] ** a
+
+
+CRITERIA = {
+    "magnitude": magnitude_scores,
+    "wanda": wanda_scores,
+    "ria": ria_scores,
+}
+
+
+def warmstart_mask(
+    W: jnp.ndarray,
+    G: jnp.ndarray | None,
+    pattern: masks_lib.Pattern,
+    criterion: str = "wanda",
+) -> jnp.ndarray:
+    """Saliency -> pattern-constrained keep-mask."""
+    fn = CRITERIA[criterion]
+    if criterion == "magnitude":
+        scores = fn(W)
+    else:
+        if G is None:
+            raise ValueError(f"criterion {criterion!r} needs calibration Gram stats")
+        scores = fn(W, G)
+    return masks_lib.make_mask(scores, pattern)

@@ -1,0 +1,109 @@
+"""Synthetic Zipf–Markov language — the offline C4 stand-in (DESIGN §9).
+
+Design goals (what the paper's calibration data provides and we preserve):
+
+* heavy-tailed unigram statistics (Zipf marginal) — produces the
+  activation-magnitude outliers that make |W|-only pruning fail on
+  transformers and give Wanda its edge;
+* strong token-to-token correlation (first-order Markov over latent
+  "topics") — produces *correlated features* X X^T with significant
+  off-diagonal mass, which is exactly what separates SparseSwaps (exact
+  quadratic objective) from Wanda (diagonal upper bound);
+* deterministic, keyed by (seed, host, step) — a restarted host replays
+  identical batches (fault-tolerance requirement, DESIGN §6).
+
+The chain: K latent topics, each with its own Zipf-permuted emission
+distribution over V tokens; topics persist with probability ``stickiness``.
+Sampling is a lax.scan over positions, jit-compiled, fully on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    vocab_size: int
+    n_topics: int = 8
+    zipf_a: float = 1.2
+    stickiness: float = 0.95
+    seed: int = 0
+
+
+def _emission_logits(cfg: CorpusConfig) -> jnp.ndarray:
+    """(K, V) topic emission log-probs: Zipf magnitudes, per-topic permutation."""
+    ranks = jnp.arange(1, cfg.vocab_size + 1, dtype=jnp.float32)
+    zipf = -cfg.zipf_a * jnp.log(ranks)
+    keys = jax.random.split(jax.random.key(cfg.seed), cfg.n_topics)
+    perms = jnp.stack([jax.random.permutation(k, cfg.vocab_size) for k in keys])
+    return zipf[perms]                      # (K, V)
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch", "seq"))
+def sample_batch(cfg: CorpusConfig, key, batch: int, seq: int) -> jnp.ndarray:
+    """(batch, seq+1) int32 token stream (inputs = [:, :-1], labels = [:, 1:])."""
+    emis = _emission_logits(cfg)
+    k_topic, k_switch, k_tok = jax.random.split(key, 3)
+    topic0 = jax.random.randint(k_topic, (batch,), 0, cfg.n_topics)
+
+    def step(carry, ks):
+        topic = carry
+        k_s, k_e, k_t = jax.random.split(ks, 3)
+        switch = jax.random.uniform(k_s, (batch,)) > cfg.stickiness
+        new_topic = jax.random.randint(k_e, (batch,), 0, cfg.n_topics)
+        topic = jnp.where(switch, new_topic, topic)
+        tok = jax.random.categorical(k_t, emis[topic])
+        return topic, tok
+
+    keys = jax.random.split(k_tok, seq + 1)
+    _, toks = jax.lax.scan(step, topic0, keys)
+    return toks.T.astype(jnp.int32)         # (batch, seq+1)
+
+
+def batch_key(cfg: CorpusConfig, split: str, step: int, host: int = 0):
+    """Deterministic per-(split, step, host) key — restart-replayable."""
+    k = jax.random.key(cfg.seed)
+    k = jax.random.fold_in(k, {"train": 0, "calib": 1, "val": 2}[split])
+    k = jax.random.fold_in(k, step)
+    return jax.random.fold_in(k, host)
+
+
+class DataPipeline:
+    """Stateless iterator facade over the keyed sampler."""
+
+    def __init__(self, cfg: CorpusConfig, batch: int, seq: int,
+                 split: str = "train", host: int = 0):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.split, self.host = split, host
+
+    def get(self, step: int) -> dict:
+        toks = sample_batch(self.cfg, batch_key(self.cfg, self.split, step,
+                                                self.host),
+                            self.batch, self.seq)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.get(step)
+            step += 1
+
+
+def with_modality(batch: dict, cfg_arch, key) -> dict:
+    """Attach stub frontend embeddings (vlm img / audio src) to a token batch."""
+    out = dict(batch)
+    B = batch["tokens"].shape[0]
+    d = cfg_arch.d_frontend or cfg_arch.d_model
+    if cfg_arch.family == "vlm":
+        out["img"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 7), (B, cfg_arch.n_img_tokens, d),
+        ).astype(cfg_arch.dtype)
+    if cfg_arch.is_encdec:
+        out["src"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 8), (B, cfg_arch.n_src_frames, d),
+        ).astype(cfg_arch.dtype)
+    return out

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the SparseSwaps hot spots.
+
+* ``swap_argmin`` — fused ΔL + running argmin over Gram tiles (paper Eq. 5).
+* ``gram``        — fp32-accumulating Xᵀ X for calibration (paper §2.1.2).
+
+``ops`` holds the jit'd public wrappers (padding + CPU fallback);
+``ref`` holds the pure-jnp oracles the kernels are tested against.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: Gram accumulation Xᵀ X with fp32 accumulation.
+
+Calibration activations arrive in bf16 on TPU; the Gram matrix must be
+accumulated in fp32 (paper §2.1.2 — G is the only state the refinement
+needs). The kernel is a (d, d) = (tokens, d)ᵀ (tokens, d) matmul tiled for
+the MXU with the token (contraction) dimension innermost in the grid, so
+each (TI, TJ) output tile stays resident in VMEM while token chunks stream
+through.
+
+Grid: (d/TI, d/TJ, tokens/TK). VMEM per step (defaults 256/256/512):
+two bf16 x-tiles 2×256KB + fp32 out tile 256KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xi_ref, xj_ref, out_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xi = xi_ref[...]  # (TK, TI)
+    xj = xj_ref[...]  # (TK, TJ)
+    out_ref[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_i", "tile_j", "tile_k", "interpret")
+)
+def gram_xtx_padded(
+    x: jnp.ndarray,
+    *,
+    tile_i: int = 256,
+    tile_j: int = 256,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Xᵀ X for x: (tokens, d) with tokens % tile_k == 0, d % tile == 0."""
+    T, d = x.shape
+    assert T % tile_k == 0 and d % tile_i == 0 and d % tile_j == 0
+    grid = (d // tile_i, d // tile_j, T // tile_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_k, tile_i), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tile_k, tile_j), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_i, tile_j), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(x, x)

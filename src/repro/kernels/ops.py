@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op handles padding/layout and falls back to the pure-jnp reference
+path on non-TPU backends (the kernels themselves are validated on CPU via
+``interpret=True`` in tests; production CPU paths use the chunked jnp
+implementations which XLA fuses well).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import swap_math as sm
+
+from . import ref as ref_lib
+from .gram import gram_xtx_padded
+from .swap_argmin import swap_argmin_padded
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def swap_argmin(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    c: jnp.ndarray,
+    G: jnp.ndarray,
+    *,
+    row_block: int = 16,
+    tile: int = 256,
+    interpret: bool | None = None,
+):
+    """Jointly-best 1-swap per row: (ΔL*, u*, p*) each (R,).
+
+    Computes the per-index half-costs a/b in jnp (O(R·d)), then runs the
+    fused tiled argmin kernel over G. Pads R to the row block and d to the
+    tile size (padded entries are +inf-masked so they never win).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    R, d = w.shape
+    g_diag = jnp.diagonal(G)
+    a, b = sm.swap_scores(w, m, c, g_diag)
+
+    tile = min(tile, _round_up(d, 128))
+    Rp = _round_up(R, row_block)
+    dp = _round_up(d, tile)
+    w32 = w.astype(jnp.float32)
+    G32 = G.astype(jnp.float32)
+    if (Rp, dp) != (R, d):
+        a = jnp.pad(a, ((0, Rp - R), (0, dp - d)), constant_values=jnp.inf)
+        b = jnp.pad(b, ((0, Rp - R), (0, dp - d)), constant_values=jnp.inf)
+        w32 = jnp.pad(w32, ((0, Rp - R), (0, dp - d)))
+        G32 = jnp.pad(G32, ((0, dp - d), (0, dp - d)))
+    best, u, p = swap_argmin_padded(
+        a, b, w32, G32, row_block=row_block, tile_u=tile, tile_p=tile,
+        interpret=interpret,
+    )
+    return best[:R], u[:R], p[:R]
+
+
+def gram_xtx(
+    x: jnp.ndarray,
+    *,
+    tile: int = 256,
+    tile_k: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Xᵀ X (fp32) for activations x: (..., tokens, d)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x2 = x.reshape(-1, x.shape[-1])
+    T, d = x2.shape
+    tile = min(tile, _round_up(d, 128))
+    tk = min(tile_k, _round_up(T, 128))
+    Tp, dp = _round_up(T, tk), _round_up(d, tile)
+    if (Tp, dp) != (T, d):
+        x2 = jnp.pad(x2, ((0, Tp - T), (0, dp - d)))
+    out = gram_xtx_padded(x2, tile_i=tile, tile_j=tile, tile_k=tk, interpret=interpret)
+    return out[:d, :d]
+
+
+def gram_update(G: jnp.ndarray, x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Streaming G += Xᵀ X using the kernel for the chunk product."""
+    return G.astype(jnp.float32) + gram_xtx(x, **kw)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref). They are intentionally
+simple/dense — production paths never call them on large inputs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def swap_argmin_ref(w, m, c, G):
+    """Jointly-best 1-swap per row via the dense ΔL matrix.
+
+    w, m, c: (R, d); G: (d, d). Returns (dl*, u*, p*) each (R,).
+    Ties broken toward the smallest flat index (u * d + p), matching the
+    kernel's deterministic tie-break.
+    """
+    w32 = w.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    g_diag = jnp.diagonal(G).astype(jnp.float32)
+    quad = (w32 * w32) * g_diag[None, :]
+    a = jnp.where(m > 0.5, 2.0 * w32 * c32 + quad, jnp.inf)
+    b = jnp.where(m > 0.5, jnp.inf, -2.0 * w32 * c32 + quad)
+    inter = 2.0 * jnp.einsum("ru,rp,up->rup", w32, w32, G.astype(jnp.float32))
+    dl = a[:, :, None] + b[:, None, :] - inter
+    R, d, _ = dl.shape
+    flat = dl.reshape(R, d * d)
+    idx = jnp.argmin(flat, axis=1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    return best, (idx // d).astype(jnp.int32), (idx % d).astype(jnp.int32)
+
+
+def gram_xtx_ref(x):
+    """Xᵀ X with fp32 accumulation. x: (..., tokens, d) any float dtype."""
+    x32 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return x32.T @ x32
+
+
+def gram_accum_ref(G, x):
+    """G += xᵀ x with fp32 accumulation. x: (tokens, d) any float dtype."""
+    x32 = x.astype(jnp.float32)
+    return G.astype(jnp.float32) + x32.T @ x32
+
+
+def masked_matmul_ref(x, w, mask):
+    """y = x @ (mask ⊙ w)ᵀ — pruned-layer forward. x:(B,d_in) w,mask:(d_out,d_in)."""
+    wm = (w * mask).astype(jnp.float32)
+    return x.astype(jnp.float32) @ wm.T

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused ΔL evaluation + running argmin over Gram tiles.
+
+The SparseSwaps hot spot (paper §2.1.3): per row, find
+    (u*, p*) = argmin_{u kept, p pruned}  a_u + b_p − 2 w_u w_p G_up
+without materializing the (R, d, d) ΔL tensor. The kernel streams G from
+HBM in (TU, TP) VMEM tiles; each tile is combined with per-row vectors for
+a whole block of rows (G-tile reuse grows arithmetic intensity linearly in
+the row-block size), and a running (min, argmin) is kept in VMEM across the
+sequential TPU grid.
+
+Tie-break is deterministic and matches the oracle exactly: smallest global
+flat index u*d + p wins among equal ΔL.
+
+Grid: (rows/RB, d/TU, d/TP) — row block outermost, so the output block (and
+the flat-index scratch) is revisited across all (u,p) tiles of one row
+block before moving on.
+
+VMEM per step (defaults RB=16, TU=TP=256):
+    G tile 256KB + dl tile (RB,TU,TP) fp32 4MB + vectors ~100KB  << 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG_I32 = 2**30  # python int: jnp constants may not be captured by kernels
+
+
+def _kernel(a_ref, b_ref, wu_ref, wp_ref, g_ref, best_ref, u_ref, p_ref,
+            bflat_ref, *, tu: int, tp: int, d: int):
+    ui = pl.program_id(1)
+    pi = pl.program_id(2)
+
+    @pl.when((ui == 0) & (pi == 0))
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, jnp.inf)
+        u_ref[...] = jnp.zeros_like(u_ref)
+        p_ref[...] = jnp.zeros_like(p_ref)
+        bflat_ref[...] = jnp.full_like(bflat_ref, _BIG_I32)
+
+    a = a_ref[...]            # (RB, TU) fp32, +inf where u not kept
+    b = b_ref[...]            # (RB, TP) fp32, +inf where p not pruned
+    wu = wu_ref[...]          # (RB, TU)
+    wp = wp_ref[...]          # (RB, TP)
+    g = g_ref[...]            # (TU, TP)
+
+    dl = (
+        a[:, :, None]
+        + b[:, None, :]
+        - 2.0 * (wu[:, :, None] * wp[:, None, :]) * g[None, :, :]
+    )                          # (RB, TU, TP)
+    rb = dl.shape[0]
+    flat = dl.reshape(rb, tu * tp)
+    tile_min = jnp.min(flat, axis=1, keepdims=True)            # (RB, 1)
+    ii = jax.lax.broadcasted_iota(jnp.int32, flat.shape, 1)
+    loc = jnp.min(
+        jnp.where(flat == tile_min, ii, _BIG_I32), axis=1, keepdims=True
+    )                                                           # (RB, 1)
+    gu = ui * tu + loc // tp
+    gp = pi * tp + loc % tp
+    gflat = gu * d + gp
+
+    prev = best_ref[...]
+    prev_flat = bflat_ref[...]
+    better = (tile_min < prev) | ((tile_min == prev) & (gflat < prev_flat))
+    best_ref[...] = jnp.where(better, tile_min, prev)
+    u_ref[...] = jnp.where(better, gu, u_ref[...])
+    p_ref[...] = jnp.where(better, gp, p_ref[...])
+    bflat_ref[...] = jnp.where(better, gflat, prev_flat)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("row_block", "tile_u", "tile_p", "interpret")
+)
+def swap_argmin_padded(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    w: jnp.ndarray,
+    G: jnp.ndarray,
+    *,
+    row_block: int = 16,
+    tile_u: int = 256,
+    tile_p: int = 256,
+    interpret: bool = False,
+):
+    """Core pallas_call. Requires R % row_block == 0 and d % tile == 0.
+
+    a, b: (R, d) fp32 with +inf at infeasible entries; w: (R, d) fp32;
+    G: (d, d) fp32. Returns (best (R,), u (R,), p (R,)).
+    """
+    R, d = a.shape
+    assert R % row_block == 0 and d % tile_u == 0 and d % tile_p == 0
+    grid = (R // row_block, d // tile_u, d // tile_p)
+
+    row_u = lambda ri, ui, pi: (ri, ui)
+    row_p = lambda ri, ui, pi: (ri, pi)
+    out_map = lambda ri, ui, pi: (ri, 0)
+
+    best, u_idx, p_idx = pl.pallas_call(
+        functools.partial(_kernel, tu=tile_u, tp=tile_p, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, tile_u), row_u),   # a
+            pl.BlockSpec((row_block, tile_p), row_p),   # b
+            pl.BlockSpec((row_block, tile_u), row_u),   # w (u view)
+            pl.BlockSpec((row_block, tile_p), row_p),   # w (p view)
+            pl.BlockSpec((tile_u, tile_p), lambda ri, ui, pi: (ui, pi)),  # G
+        ],
+        out_specs=[
+            pl.BlockSpec((row_block, 1), out_map),
+            pl.BlockSpec((row_block, 1), out_map),
+            pl.BlockSpec((row_block, 1), out_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((row_block, 1), jnp.int32)],
+        interpret=interpret,
+    )(a, b, w, w, G)
+    return best[:, 0], u_idx[:, 0], p_idx[:, 0]

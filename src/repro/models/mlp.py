@@ -1,0 +1,42 @@
+"""Feed-forward blocks: gated (SwiGLU-family) and plain two-matrix MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import common
+from .common import ACTS, dense
+
+
+def init_mlp_params(key, cfg, *, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "gated":
+        return {
+            "w_gate": common.linear_init(ks[0], cfg.d_ff, d, dt),
+            "w_up": common.linear_init(ks[1], cfg.d_ff, d, dt),
+            "w_down": common.linear_init(ks[2], cfg.d_model, cfg.d_ff, dt),
+        }
+    return {
+        "w_up": common.linear_init(ks[0], cfg.d_ff, d, dt),
+        "w_down": common.linear_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+PRUNABLE_MLP = ("w_gate", "w_up", "w_down")
+
+
+def mlp_block(p, x, cfg, *, masks=None, taps=None) -> jnp.ndarray:
+    act = ACTS[cfg.act]
+    m = (lambda n: None) if masks is None else masks.get
+    up = dense(x, p["w_up"], mask=m("w_up"), tap="w_up", taps=taps)
+    if "w_gate" in p:
+        gate = dense(x, p["w_gate"], mask=m("w_gate"), tap="w_gate", taps=taps)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = constrain(h, "batch", None, "mlp")
+    return dense(h, p["w_down"], mask=m("w_down"), tap="w_down", taps=taps)

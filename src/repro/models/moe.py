@@ -1,0 +1,169 @@
+"""Top-k MoE with grouped, sort-based capacity dispatch (GShard-style groups).
+
+TPU-native design notes (DESIGN.md §2):
+
+* Dispatch is *grouped by sequence* so each data shard routes its own
+  tokens — no cross-shard scatter. Within a group, tokens are routed with a
+  stable argsort by expert id and placed into an (E, C) capacity buffer
+  (overflow drops, standard GShard semantics). Expert compute is then three
+  dense einsums over (B, E, C, ·) — MXU-friendly, no one-hot (T x E x C)
+  dispatch tensor (that tensor is quadratic in tokens and kills HBM).
+* Two parallelism modes (cfg.moe_parallelism):
+    "tp" — every device holds all experts, sharded on d_ff ("mlp" axis).
+    "ep" — experts sharded over the "expert" logical axis; GSPMD inserts
+           the all-to-all at the capacity-buffer boundary.
+* The router stays dense/unpruned (tiny and accuracy-critical); expert
+  matrices are prunable, each with its *own* Gram accumulated from exactly
+  the tokens routed to it (zero-padded capacity slots contribute zero to
+  X X^T, so the buffer layout is calibration-exact).
+
+Aux losses: switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import common
+from .common import ACTS, dense
+
+
+def init_moe_params(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": common.linear_init(ks[0], e, d, jnp.float32),
+        "w_gate": common.normal_init(ks[1], (e, f, d), d**-0.5, dt),
+        "w_up": common.normal_init(ks[2], (e, f, d), d**-0.5, dt),
+        "w_down": common.normal_init(ks[3], (e, d, f), f**-0.5, dt),
+    }
+
+
+PRUNABLE_MOE = ("w_gate", "w_up", "w_down")  # router excluded (DESIGN §4)
+
+
+def capacity(group_tokens: int, cfg) -> int:
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, 1)
+
+
+def _dispatch_group(xg, ids, gates, *, n_experts: int, cap: int):
+    """Place one group's tokens into the (E*C, d) capacity buffer.
+
+    xg: (G, d); ids/gates: (G, k). Returns (buf (E*C, d), dest (G*k,),
+    combine (G*k,)) where dest == E*C marks a dropped assignment.
+    """
+    G, k = ids.shape
+    flat_e = ids.reshape(G * k)
+    flat_t = jnp.repeat(jnp.arange(G), k)
+    flat_g = gates.reshape(G * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    start = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(G * k) - start[sorted_e]
+    dest_sorted = jnp.where(pos_in_e < cap, sorted_e * cap + pos_in_e, n_experts * cap)
+    # unsort dest back to assignment order
+    dest = jnp.zeros((G * k,), jnp.int32).at[order].set(dest_sorted.astype(jnp.int32))
+    buf = jnp.zeros((n_experts * cap, xg.shape[-1]), xg.dtype)
+    buf = buf.at[dest].set(xg[flat_t], mode="drop")
+    return buf, dest, flat_g
+
+
+def _combine_group(out_buf, dest, flat_g, *, group: int, top_k: int):
+    """Gather expert outputs back to token order, gate-weighted sum over k."""
+    got = out_buf.at[dest].get(mode="fill", fill_value=0)      # (G*k, d)
+    got = got * flat_g[:, None].astype(got.dtype)
+    return jnp.sum(got.reshape(group, top_k, -1), axis=1)
+
+
+def moe_block(p, x, cfg, *, masks=None, taps=None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar fp32).
+
+    Groups are ``cfg.moe_group_size`` consecutive tokens (0 = the whole
+    sequence). Aligning the group size with the sequence shard makes the
+    sort-based dispatch *device-local*: with seq-parallel activations the
+    whole MoE block then runs as (data x model)-way data parallelism over
+    replicated tiny experts — zero dispatch collectives (§Perf cell B).
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gs = cfg.moe_group_size if (cfg.moe_group_size
+                                and S % cfg.moe_group_size == 0) else S
+    ng = S // gs
+    cap = capacity(gs, cfg)
+    m = (lambda n: None) if masks is None else masks.get
+
+    logits = (x.astype(jnp.float32) @ p["router"].T.astype(jnp.float32))  # (B,S,E)
+    top_logits, ids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_logits, axis=-1)                            # (B,S,k)
+
+    xg = x.reshape(B * ng, gs, d)
+    buf, dest, flat_g = jax.vmap(
+        lambda xx, ii, gg: _dispatch_group(xx, ii, gg, n_experts=e, cap=cap)
+    )(xg, ids.reshape(B * ng, gs, k), gates.reshape(B * ng, gs, k))
+    # buf: (B*ng, E*C, d) -> (B, ng, E, C, d); groups follow the seq shard
+    buf = buf.reshape(B, ng, e, cap, d)
+    buf = constrain(buf, "batch", "seq" if ng > 1 else None, "expert",
+                    None, None)
+
+    if taps is not None:
+        b32 = buf.astype(jnp.float32)
+        filled = (dest < e * cap).astype(jnp.float32)            # (B*ng, gs*k)
+        dest_e = jnp.clip(dest // cap, 0, e - 1)
+        n_e = jnp.zeros((e,), jnp.float32).at[dest_e.reshape(-1)].add(
+            filled.reshape(-1))                                   # tokens/expert
+        _tap_add(taps, "moe_w_up", {
+            "g": jnp.einsum("bneci,bnecj->eij", b32, b32),
+            "s": jnp.einsum("bneci->ei", b32),
+            "n": n_e,
+        })
+
+    act = ACTS[cfg.act]
+    wg = _masked(p["w_gate"], m("w_gate"))
+    wu = _masked(p["w_up"], m("w_up"))
+    wd = _masked(p["w_down"], m("w_down"))
+    up = jnp.einsum("bnecd,efd->bnecf", buf, wu.astype(buf.dtype))
+    gate = jnp.einsum("bnecd,efd->bnecf", buf, wg.astype(buf.dtype))
+    h = act(gate) * up
+    # seq-sharded groups already parallelize expert compute over the model
+    # axis via tokens — the f dim must NOT also map to "model" (one mesh
+    # axis can appear once per spec).
+    h = constrain(h, "batch", "seq" if ng > 1 else None, "expert", None,
+                  None if ng > 1 else "mlp")
+    if taps is not None:
+        h32 = h.astype(jnp.float32)
+        _tap_add(taps, "moe_w_down", {
+            "g": jnp.einsum("bneci,bnecj->eij", h32, h32),
+            "s": jnp.einsum("bneci->ei", h32),
+            "n": taps["moe_w_up"]["n"],
+        })
+    out_buf = jnp.einsum("bnecf,edf->bnecd", h, wd.astype(h.dtype))
+
+    out = jax.vmap(
+        lambda ob, de, fg: _combine_group(ob.reshape(e * cap, d), de, fg,
+                                          group=gs, top_k=k)
+    )(out_buf.reshape(B * ng, e, cap, d), dest, flat_g)
+    out = out.reshape(B, S, d).astype(x.dtype)
+
+    # --- aux losses ---------------------------------------------------
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    me = jnp.mean(probs, axis=(0, 1))                          # mean router prob
+    dispatch_frac = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    dispatch_frac = dispatch_frac / (B * S * k)
+    lb = e * jnp.sum(me * dispatch_frac)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.router_aux_coef * lb + cfg.router_z_coef * z
+    return out, aux
+
+
+def _masked(w, mask):
+    return w if mask is None else w * mask.astype(w.dtype)
+
+
+def _tap_add(taps, name, ent):
+    prev = taps.get(name)
+    taps[name] = ent if prev is None else jax.tree.map(jnp.add, prev, ent)

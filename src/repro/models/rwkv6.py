@@ -1,0 +1,258 @@
+"""RWKV6 "Finch" — data-dependent-decay linear attention, chunked for TPU.
+
+Per head (key dim dh_k = value dim dh_v = cfg.rwkv_head_dim), the WKV
+recurrence with per-channel data-dependent decay w_t in (0,1)^dh and bonus
+u in R^dh:
+
+    o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The chunked evaluation (chunk C = cfg.rwkv_chunk) turns this into matmuls:
+with b_t = cumsum(log w) and beta = b_C / 2 (per-channel midpoint),
+
+    r~_t = r_t * exp(b_{t-1} - beta),   k~_i = k_i * exp(beta - b_i)
+    intra = strict_lower(r~ k~^T) + diag(r_t . (u*k_t))
+    o     = intra @ V + (exp(b_{t-1}) * r_t) @ S_in
+    S_out = exp(b_C) * S_in + (exp(b_C - b_i) * k_i)^T V
+
+The midpoint split bounds every exponent by |b_C|/2; with log w clamped to
+[-LOGW_MIN, 0) and C=16 the max exponent is 88 — inside fp32 range. All
+*true* decay factors (exp(b_C - b_i), exp(b_{t-1})) are <= 1 by
+construction. Chunk states propagate via ``jax.lax.associative_scan``
+(log-depth, unrolled — exact cost_analysis, no sequential scan).
+
+``wkv_step`` is the exact one-token recurrence used for decoding; the
+chunked path is property-tested against it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import dense
+
+LOGW_MIN = -11.0  # per-step clamp; exp(-11)≈1.7e-5 decay — below fp32 relevance
+
+
+class RWKVCache(NamedTuple):
+    s: jnp.ndarray       # (B, H, dh, dh) wkv state
+    x_tm: jnp.ndarray    # (B, D) previous token (time-mix shift)
+    x_cm: jnp.ndarray    # (B, D) previous token (channel-mix shift)
+
+
+def init_rwkv_params(key, cfg, layer_scale: float = 1.0) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.d_model // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    lm, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix projections (prunable)
+        "wr": common.linear_init(ks[0], D, D, dt),
+        "wk": common.linear_init(ks[1], D, D, dt),
+        "wv": common.linear_init(ks[2], D, D, dt),
+        "wg": common.linear_init(ks[3], D, D, dt),
+        "wo": common.linear_init(ks[4], D, D, dt),
+        # data-dependent decay LoRA (prunable per DESIGN §4)
+        "td_w1": common.linear_init(ks[5], ld, D, dt),
+        "td_w2": common.linear_init(ks[6], D, ld, dt),
+        # token-shift ddlerp (small, unpruned)
+        "maa_x": jnp.zeros((D,), jnp.float32),
+        "maa_rkvwg": jnp.zeros((5, D), jnp.float32),
+        "maa_w1": common.normal_init(ks[7], (5 * lm, D), D**-0.5, jnp.float32),
+        "maa_w2": common.normal_init(ks[8], (5, D, lm), lm**-0.5, jnp.float32),
+        "decay_base": jnp.full((D,), -4.0, jnp.float32),
+        "u": common.normal_init(ks[9], (H, dh), 0.1, jnp.float32),
+        "ln_x_scale": jnp.ones((D,), jnp.float32),
+        "ln_x_bias": jnp.zeros((D,), jnp.float32),
+        # channel-mix (prunable)
+        "cm_wk": common.linear_init(ks[10], F, D, dt),
+        "cm_wv": common.linear_init(ks[11], D, F, dt),
+        "cm_wr": common.linear_init(jax.random.fold_in(key, 99), D, D, dt),
+        "cm_maa_k": jnp.zeros((D,), jnp.float32),
+        "cm_maa_r": jnp.zeros((D,), jnp.float32),
+    }
+    return p
+
+
+PRUNABLE_RWKV = ("wr", "wk", "wv", "wg", "wo", "td_w1", "td_w2",
+                 "cm_wk", "cm_wv", "cm_wr")
+
+
+def _shift(x, x_prev=None):
+    """Token shift: y_t = x_{t-1}. x: (B,S,D); x_prev: (B,D) carry-in."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift interpolation -> (xw, xk, xv, xr, xg)."""
+    dx = (sx - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    base = x32 + dx * p["maa_x"]
+    z = jnp.tanh(base @ p["maa_w1"].T)                     # (B,S,5*lm)
+    lm = p["maa_w2"].shape[-1]
+    z5 = z.reshape(*z.shape[:-1], 5, lm)
+    mix = jnp.einsum("...fl,fdl->f...d", z5, p["maa_w2"])
+    outs = x32[None] + dx[None] * (p["maa_rkvwg"][:, None, None, :] + mix)
+    return tuple(outs[i].astype(x.dtype) for i in range(5))
+
+
+def _decay(p, xw, masks=None, taps=None):
+    """Per-channel log decay, clamped for the chunked path. (B,S,D) fp32."""
+    m = (lambda n: None) if masks is None else masks.get
+    lo = dense(jnp.tanh(
+        dense(xw, p["td_w1"], mask=m("td_w1"), tap="td_w1", taps=taps).astype(jnp.float32)
+    ).astype(xw.dtype), p["td_w2"], mask=m("td_w2"), tap="td_w2", taps=taps)
+    ww = p["decay_base"] + lo.astype(jnp.float32)
+    return jnp.clip(-jnp.exp(ww), LOGW_MIN, -1e-8)
+
+
+def _groupnorm_heads(o, scale, bias, n_heads, eps=64e-5):
+    """LayerNorm within each head (RWKV's GroupNorm(H))."""
+    B, S, D = o.shape
+    oh = o.reshape(B, S, n_heads, D // n_heads).astype(jnp.float32)
+    mu = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + eps)
+    return (oh.reshape(B, S, D) * scale + bias)
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, logw, u, *, chunk: int, s0=None):
+    """r,k,v: (B,S,H,dh); logw: (B,S,H,dh) (<0); u: (H,dh).
+
+    Returns (o (B,S,H,dh), s_final (B,H,dh,dh)).
+    """
+    B, S, H, dh = r.shape
+    S0 = S
+    if S % chunk:
+        # zero-pad: logw=0 => decay 1, k=v=0 contribute nothing — state exact.
+        pad = chunk - S % chunk
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad4), jnp.pad(k, pad4), jnp.pad(v, pad4)
+        logw = jnp.pad(logw, pad4)
+        S = S + pad
+    NC, C = S // chunk, chunk
+    rs = r.reshape(B, NC, C, H, dh).astype(jnp.float32)
+    ks_ = k.reshape(B, NC, C, H, dh).astype(jnp.float32)
+    vs = v.reshape(B, NC, C, H, dh).astype(jnp.float32)
+    lw = logw.reshape(B, NC, C, H, dh)
+
+    b = jnp.cumsum(lw, axis=2)                        # inclusive (B,NC,C,H,dh)
+    b_prev = b - lw                                   # exclusive (b_{t-1})
+    b_last = b[:, :, -1]                              # (B,NC,H,dh)
+    beta = 0.5 * b_last[:, :, None]                   # midpoint
+
+    r_t = rs * jnp.exp(b_prev - beta)
+    k_t = ks_ * jnp.exp(beta - b)
+    scores = jnp.einsum("bnthd,bnihd->bnhti", r_t, k_t)          # (B,NC,H,C,C)
+    strict = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(strict[None, None, None], scores, 0.0)
+    du = jnp.einsum("bnthd,bnthd->bnht", rs, u[None, None, None] * ks_)
+    scores = scores + jnp.eye(C)[None, None, None] * du[..., None]
+    o_intra = jnp.einsum("bnhti,bnihd->bnthd", scores, vs)
+
+    # chunk summaries
+    k_dec = ks_ * jnp.exp(b_last[:, :, None] - b)                # <= k
+    T = jnp.einsum("bnihd,bnihv->bnhdv", k_dec, vs)              # (B,NC,H,dh,dh)
+    a = jnp.exp(b_last)                                          # (B,NC,H,dh)
+
+    def combine(e1, e2):
+        a1, t1 = e1
+        a2, t2 = e2
+        return a1 * a2, a2[..., :, None] * t1 + t2
+
+    a_s = jnp.moveaxis(a, 1, 0)
+    T_s = jnp.moveaxis(T, 1, 0)
+    if s0 is not None:
+        T_s = T_s.at[0].add(a_s[0][..., :, None] * s0.astype(jnp.float32))
+    _, s_acc = jax.lax.associative_scan(combine, (a_s, T_s))
+    s_final = s_acc[-1]
+    s_in = jnp.concatenate(
+        [jnp.zeros_like(s_acc[:1]) if s0 is None else s0[None].astype(jnp.float32),
+         s_acc[:-1]], axis=0)
+    s_in = jnp.moveaxis(s_in, 0, 1)                              # (B,NC,H,dh,dh)
+
+    o_inter = jnp.einsum("bnthd,bnhdv->bnthv", rs * jnp.exp(b_prev), s_in)
+    o = (o_intra + o_inter).reshape(B, S, H, dh)[:, :S0]
+    return o.astype(r.dtype), s_final
+
+
+def wkv_step(r_t, k_t, v_t, logw_t, u, s):
+    """Exact one-token WKV. r/k/v/logw: (B,H,dh); s: (B,H,dh,dh)."""
+    r32, k32, v32 = (z.astype(jnp.float32) for z in (r_t, k_t, v_t))
+    kv = jnp.einsum("bhd,bhv->bhdv", k32, v32)
+    o = jnp.einsum("bhd,bhdv->bhv", r32, s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw_t)[..., None] * s + kv
+    return o.astype(r_t.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def time_mix(p, x, cfg, *, masks=None, taps=None, cache: RWKVCache | None = None):
+    """Full-sequence time-mix. x: (B,S,D). Returns (out, s_final, x_last)."""
+    m = (lambda n: None) if masks is None else masks.get
+    H, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    sx = _shift(x, None if cache is None else cache.x_tm)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = dense(xr, p["wr"], mask=m("wr"), tap="wr", taps=taps)
+    k = dense(xk, p["wk"], mask=m("wk"), tap="wk", taps=taps)
+    v = dense(xv, p["wv"], mask=m("wv"), tap="wv", taps=taps)
+    g = jax.nn.silu(dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps))
+    logw = _decay(p, xw, masks=masks, taps=taps)
+    B, S, D = x.shape
+    shp = (B, S, H, dh)
+    o, s_fin = wkv_chunked(r.reshape(shp), k.reshape(shp), v.reshape(shp),
+                           logw.reshape(shp), p["u"], chunk=cfg.rwkv_chunk,
+                           s0=None if cache is None else cache.s)
+    o = _groupnorm_heads(o.reshape(B, S, D), p["ln_x_scale"], p["ln_x_bias"], H)
+    o = (o * g.astype(jnp.float32)).astype(x.dtype)
+    out = dense(o, p["wo"], mask=m("wo"), tap="wo", taps=taps)
+    return out, s_fin, x[:, -1]
+
+
+def channel_mix(p, x, cfg, *, masks=None, taps=None, x_prev=None):
+    """RWKV channel-mix (squared-relu MLP with token shift)."""
+    m = (lambda n: None) if masks is None else masks.get
+    sx = _shift(x, x_prev)
+    dx = (sx - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + dx * p["cm_maa_k"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + dx * p["cm_maa_r"]).astype(x.dtype)
+    k = dense(xk, p["cm_wk"], mask=m("cm_wk"), tap="cm_wk", taps=taps)
+    k = common.relu2(k)
+    kv = dense(k, p["cm_wv"], mask=m("cm_wv"), tap="cm_wv", taps=taps)
+    rgate = jax.nn.sigmoid(
+        dense(xr, p["cm_wr"], mask=m("cm_wr"), tap="cm_wr", taps=taps).astype(jnp.float32))
+    return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1]
+
+
+def time_mix_decode(p, x_t, cache: RWKVCache, cfg, *, masks=None, taps=None):
+    """One-token time-mix. x_t: (B,1,D)."""
+    m = (lambda n: None) if masks is None else masks.get
+    H, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    sx = cache.x_tm[:, None]
+    xw, xk, xv, xr, xg = _ddlerp(p, x_t, sx)
+    r = dense(xr, p["wr"], mask=m("wr"), tap="wr", taps=taps)
+    k = dense(xk, p["wk"], mask=m("wk"), tap="wk", taps=taps)
+    v = dense(xv, p["wv"], mask=m("wv"), tap="wv", taps=taps)
+    g = jax.nn.silu(dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps))
+    logw = _decay(p, xw, masks=masks, taps=taps)
+    B = x_t.shape[0]
+    shp = (B, H, dh)
+    o, s_new = wkv_step(r[:, 0].reshape(shp), k[:, 0].reshape(shp),
+                        v[:, 0].reshape(shp), logw[:, 0].reshape(shp),
+                        p["u"], cache.s)
+    o = _groupnorm_heads(o.reshape(B, 1, -1), p["ln_x_scale"], p["ln_x_bias"], H)
+    o = (o * g.astype(jnp.float32)).astype(x_t.dtype)
+    out = dense(o, p["wo"], mask=m("wo"), tap="wo", taps=taps)
+    return out, s_new, x_t[:, -1]

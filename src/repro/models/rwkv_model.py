@@ -1,0 +1,144 @@
+"""RWKV6 full model: embed -> [time-mix + channel-mix] x L -> head.
+
+Attention-free; serving state is O(1) per layer (wkv matrix + two shift
+vectors), which is what makes the long_500k decode cell runnable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import common
+from . import rwkv6
+from .transformer import _apply_norm, _norm_params, ce_loss, lm_head
+
+
+class RWKVDecodeCache(NamedTuple):
+    s: jnp.ndarray       # (L, B, H, dh, dh)
+    x_tm: jnp.ndarray    # (L, B, D)
+    x_cm: jnp.ndarray    # (L, B, D)
+    t: jnp.ndarray
+
+
+def init_layer(key, cfg) -> dict:
+    return {
+        "ln1": _norm_params(cfg),
+        "tm": rwkv6.init_rwkv_params(key, cfg),
+        "ln2": _norm_params(cfg),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    layers = [init_layer(k, cfg) for k in jax.random.split(kl, cfg.n_layers)]
+    return {
+        "embed": common.normal_init(ke, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "ln_in": _norm_params(cfg),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "ln_f": _norm_params(cfg),
+        "head": common.normal_init(kh, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+    }
+
+
+def rwkv_layer(p, x, cfg, *, masks=None, want_taps=False,
+               cache=None):
+    """One RWKV6 layer (train/prefill). Returns (x, taps, cache')."""
+    taps = {} if want_taps else None
+    h = _apply_norm(p["ln1"], x, cfg)
+    a, s_fin, x_tm_last = rwkv6.time_mix(p["tm"], h, cfg, masks=masks, taps=taps,
+                                         cache=cache)
+    x = x + a
+    h2 = _apply_norm(p["ln2"], x, cfg)
+    f, x_cm_last = rwkv6.channel_mix(p["tm"], h2, cfg, masks=masks, taps=taps,
+                                     x_prev=None if cache is None else cache.x_cm)
+    x = x + f
+    x = constrain(x, "batch", "seq", None)
+    new_cache = rwkv6.RWKVCache(s=s_fin, x_tm=x_tm_last, x_cm=x_cm_last)
+    return x, (taps or {}), new_cache
+
+
+def forward(params, batch, cfg, *, masks=None, want_taps=False):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _apply_norm(params["ln_in"], x, cfg)
+    x = constrain(x, "batch", "seq", None)
+    m_layers = None if masks is None else masks["layers"]
+
+    def body(carry, xs):
+        pl_, ml_ = xs
+        xc, taps, _ = rwkv_layer(pl_, carry, cfg, masks=ml_, want_taps=want_taps)
+        return xc, taps
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, taps = common.scan(body, x, (params["layers"], m_layers), cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    return x, taps, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, *, masks=None, want_taps=False):
+    hidden, taps, aux = forward(params, batch, cfg, masks=masks,
+                                want_taps=want_taps)
+    loss = ce_loss(params, hidden, batch["labels"], cfg)
+    return loss, {"ce": loss, "aux": aux, "taps": taps}
+
+
+def init_decode_cache(params, cfg, batch: int, s_max: int, **_):
+    L, D = cfg.n_layers, cfg.d_model
+    H, dh = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return RWKVDecodeCache(
+        s=jnp.zeros((L, batch, H, dh, dh), jnp.float32),
+        x_tm=jnp.zeros((L, batch, D), dt),
+        x_cm=jnp.zeros((L, batch, D), dt),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, batch, cfg, cache, *, masks=None):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _apply_norm(params["ln_in"], x, cfg)
+    m_layers = None if masks is None else masks["layers"]
+
+    def body(carry, xs):
+        pl_, ml_ = xs
+        xc, _, new_c = rwkv_layer(pl_, carry, cfg, masks=ml_, want_taps=False,
+                                  cache=None)
+        return xc, new_c
+
+    x, caches = common.scan(body, x, (params["layers"], m_layers), cfg=cfg)
+    x = _apply_norm(params["ln_f"], x[:, -1:], cfg)
+    new_cache = RWKVDecodeCache(s=caches.s, x_tm=caches.x_tm, x_cm=caches.x_cm,
+                                t=jnp.asarray(tokens.shape[1], jnp.int32))
+    return lm_head(params, x, cfg), new_cache
+
+
+def decode_step(params, token, cfg, cache, *, masks=None):
+    x = jnp.take(params["embed"], token, axis=0)       # (B,1,D)
+    x = _apply_norm(params["ln_in"], x, cfg)
+    m_layers = None if masks is None else masks["layers"]
+
+    def body(carry, xs):
+        pl_, ml_, s_, xtm_, xcm_ = xs
+        lc = rwkv6.RWKVCache(s=s_, x_tm=xtm_, x_cm=xcm_)
+        xc = carry
+        h = _apply_norm(pl_["ln1"], xc, cfg)
+        a, s_new, x_tm_last = rwkv6.time_mix_decode(pl_["tm"], h, lc, cfg, masks=ml_)
+        xc = xc + a
+        h2 = _apply_norm(pl_["ln2"], xc, cfg)
+        f, x_cm_last = rwkv6.channel_mix(pl_["tm"], h2, cfg, masks=ml_,
+                                         x_prev=lc.x_cm)
+        xc = xc + f
+        return xc, (s_new, x_tm_last, x_cm_last)
+
+    x, (s, xtm, xcm) = common.scan(
+        body, x, (params["layers"], m_layers, cache.s, cache.x_tm, cache.x_cm),
+        cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    new_cache = RWKVDecodeCache(s=s, x_tm=xtm, x_cm=xcm, t=cache.t + 1)
+    return lm_head(params, x, cfg), new_cache

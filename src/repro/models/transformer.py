@@ -1,0 +1,357 @@
+"""Decoder-only transformer stack: dense, MoE, and cross-attn (VLM) variants.
+
+Layout conventions:
+* layer params are *stacked* on a leading L dim and iterated with
+  ``lax.scan`` (+ per-layer ``jax.checkpoint`` when cfg.remat) — compact HLO
+  and remat-bounded activation memory;
+* pruning masks mirror the stacked param tree (only prunable leaves);
+* Gram taps are scan outputs: (L, d, d) fp32 per tap site, produced only
+  when ``want_taps`` (calibration pass);
+* for VLM (cfg.cross_attn_every = k) layers are scanned in groups of
+  (k-1 self layers + 1 gated cross-attn layer), llama-3.2-vision style.
+
+The per-layer bodies (``decoder_layer``, ``cross_layer``) are module-level
+functions on *unstacked* params so the roofline harness can lower one layer
+standalone (DESIGN §7 cost composition).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import attention as attn
+from . import common
+from . import mlp as mlp_lib
+from . import moe as moe_lib
+from .common import dense
+
+
+class DecodeCache(NamedTuple):
+    kv: attn.KVCache                 # leaves stacked (L_self, ...)
+    cross_kv: tuple | None           # ((G,B,P,kvh,dh), (G,...)) for VLM
+    t: jnp.ndarray                   # () int32 next position
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_params(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def _apply_norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return common.layernorm(x, p["scale"], p["bias"])
+    return common.rmsnorm(x, p["scale"])
+
+
+def init_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": _norm_params(cfg),
+        "attn": attn.init_attn_params(k1, cfg),
+        "ln2": _norm_params(cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlp_lib.init_mlp_params(k2, cfg)
+    return p
+
+
+def init_cross_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_params(cfg),
+        "attn": attn.init_attn_params(k1, cfg, cross=True),
+        "ln2": _norm_params(cfg),
+        "mlp": mlp_lib.init_mlp_params(k2, cfg),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _stack(keys, init_fn):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[init_fn(k) for k in keys])
+
+
+def init_params(key, cfg) -> dict:
+    ke, kl, kc, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "embed": common.normal_init(ke, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "ln_f": _norm_params(cfg),
+    }
+    if cfg.cross_attn_every:
+        g = cfg.n_layers // cfg.cross_attn_every
+        ns = cfg.cross_attn_every - 1
+        lk = jax.random.split(kl, g * ns)
+        params["layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs).reshape(g, ns, *xs[0].shape),
+            *[init_layer(k, cfg) for k in lk])
+        params["cross_layers"] = _stack(jax.random.split(kc, g),
+                                        lambda k: init_cross_layer(k, cfg))
+    else:
+        params["layers"] = _stack(jax.random.split(kl, cfg.n_layers),
+                                  lambda k: init_layer(k, cfg))
+    if not cfg.tie_embeddings:
+        params["head"] = common.normal_init(kh, (cfg.vocab_size, cfg.d_model), 0.02, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-layer bodies (standalone — also the roofline cost-lowering unit)
+# ---------------------------------------------------------------------------
+
+def decoder_layer(p, x, positions, cfg, *, masks=None, want_taps=False,
+                  mode="train", cache=None, t=None):
+    """One pre-norm decoder layer. Returns (x, new_cache, taps, aux)."""
+    taps = {} if want_taps else None
+    am = None if masks is None else masks.get("attn")
+    h = _apply_norm(p["ln1"], x, cfg)
+    if mode == "decode":
+        a, new_cache = attn.decode_attention(p["attn"], h, t, cfg, cache,
+                                             masks=am, taps=taps)
+    else:
+        a, new_cache = attn.self_attention(p["attn"], h, positions, cfg,
+                                           masks=am, taps=taps, cache=cache,
+                                           mode=mode)
+        # constrain the block OUTPUT (before the residual add) to the
+        # seq-sharded layout: GSPMD then lowers the wo partial-sum as a
+        # reduce-scatter instead of all-reduce+slice — half the ICI bytes
+        # on the TP reduction (§Perf cell B, iteration 2).
+        a = constrain(a, "batch", "seq", None)
+    x = x + a
+    h = _apply_norm(p["ln2"], x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        mm = None if masks is None else masks.get("moe")
+        f, aux = moe_lib.moe_block(p["moe"], h, cfg, masks=mm, taps=taps)
+    else:
+        mm = None if masks is None else masks.get("mlp")
+        f = mlp_lib.mlp_block(p["mlp"], h, cfg, masks=mm, taps=taps)
+    if mode != "decode":
+        f = constrain(f, "batch", "seq", None)
+    x = x + f
+    if mode == "decode":
+        x = constrain(x, "batch", None, None)
+    else:
+        x = constrain(x, "batch", "seq", None)
+    return x, new_cache, (taps or {}), aux
+
+
+def cross_layer(p, x, kv_states, cfg, *, masks=None, want_taps=False,
+                kv_cache=None):
+    """Gated cross-attention layer (VLM). kv_states: (B,P,d) or None."""
+    taps = {} if want_taps else None
+    am = None if masks is None else masks.get("attn")
+    h = _apply_norm(p["ln1"], x, cfg)
+    a = attn.cross_attention(p["attn"], h, kv_states, cfg, masks=am, taps=taps,
+                             kv_cache=kv_cache)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+    h = _apply_norm(p["ln2"], x, cfg)
+    mm = None if masks is None else masks.get("mlp")
+    f = mlp_lib.mlp_block(p["mlp"], h, cfg, masks=mm, taps=taps)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * f
+    return x, (taps or {})
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _maybe_ckpt(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan_layers(params, x, positions, cfg, *, masks, want_taps, mode,
+                 cache=None, t=None):
+    """Scan the (optionally grouped) layer stack.
+
+    Returns (x, new_cache, taps, aux). ``cache``/``new_cache`` are stacked
+    KV caches for prefill/decode, None for train.
+    """
+    m_layers = None if masks is None else masks["layers"]
+    m_cross = None if masks is None or "cross_layers" not in masks else masks["cross_layers"]
+
+    if not cfg.cross_attn_every:
+        def body(carry, xs):
+            xc, aux = carry
+            pl_, ml_, cache_l = xs
+            xc, new_c, taps, a = decoder_layer(
+                pl_, xc, positions, cfg, masks=ml_, want_taps=want_taps,
+                mode=mode, cache=cache_l, t=t)
+            return (xc, aux + a), (taps, new_c)
+
+        xs = (params["layers"], m_layers, cache)
+        (x, aux), (taps, new_cache) = common.scan(
+            _maybe_ckpt(body, cfg), (x, jnp.zeros((), jnp.float32)), xs,
+            cfg=cfg)
+        return x, new_cache, taps, aux
+
+    # --- grouped scan: (k-1) self layers + 1 cross layer per group ---------
+    img_states = params.get("_img_states")  # fixed across groups (closure)
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        pg, mg, pc, mc, cache_g, cross_kv_g = xs
+
+        def inner(carry2, xs2):
+            xc2, aux2 = carry2
+            pl_, ml_, cache_l = xs2
+            xc2, new_c, taps, a = decoder_layer(
+                pl_, xc2, positions, cfg, masks=ml_, want_taps=want_taps,
+                mode=mode, cache=cache_l, t=t)
+            return (xc2, aux2 + a), (taps, new_c)
+
+        # checkpoint the INNER body too: without it, the backward of a
+        # (checkpointed) group replays the whole inner scan and keeps every
+        # self-layer's attention probabilities live at once — measured
+        # 17 GiB f32 (+8.5 GiB bf16) per device for llama-3.2-vision-90b
+        # train_4k (EXPERIMENTS.md §Perf cell A, iteration 1).
+        (xc, aux), (taps_s, new_cache_g) = common.scan(
+            _maybe_ckpt(inner, cfg), (xc, aux), (pg, mg, cache_g), cfg=cfg)
+        xc, taps_c = cross_layer(pc, xc, img_states, cfg, masks=mc,
+                                 want_taps=want_taps, kv_cache=cross_kv_g)
+        return (xc, aux), (taps_s, taps_c, new_cache_g)
+
+    xs = (params["layers"], m_layers, params["cross_layers"], m_cross,
+          cache, params.get("_cross_kv"))
+    (x, aux), (taps_s, taps_c, new_cache) = common.scan(
+        _maybe_ckpt(group_body, cfg), (x, jnp.zeros((), jnp.float32)), xs,
+        cfg=cfg)
+    taps = {"self": taps_s, "cross": taps_c}
+    return x, new_cache, taps, aux
+
+
+def forward(params, batch, cfg, *, masks=None, want_taps=False):
+    """Training/scoring forward. batch: tokens (B,S) [+ img (B,P,d)].
+
+    Returns (hidden (B,S,D), taps, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(S)
+    if cfg.cross_attn_every:
+        params = dict(params)
+        params["_img_states"] = batch["img"].astype(x.dtype)
+        params["_cross_kv"] = None
+    x, _, taps, aux = _scan_layers(params, x, positions, cfg, masks=masks,
+                                   want_taps=want_taps, mode="train")
+    x = _apply_norm(params["ln_f"], x, cfg)
+    return x, taps, aux
+
+
+def lm_head(params, hidden, cfg):
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = hidden @ head.T.astype(hidden.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def ce_loss(params, hidden, labels, cfg):
+    """Cross-entropy; seq-chunked when cfg.head_chunk to bound logit memory."""
+    B, S, D = hidden.shape
+    hc = cfg.head_chunk
+    if hc and S > hc and S % hc == 0:
+        def body(_, xs):
+            h_, l_ = xs
+            return None, _ce_chunk(params, h_, l_, cfg)
+        hs = hidden.reshape(B, S // hc, hc, D).swapaxes(0, 1)
+        ls = labels.reshape(B, S // hc, hc).swapaxes(0, 1)
+        _, (tot, cnt) = common.scan(jax.checkpoint(body), None, (hs, ls),
+                                    cfg=cfg)
+        return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+    tot, cnt = _ce_chunk(params, hidden, labels, cfg)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _ce_chunk(params, hidden, labels, cfg):
+    logits = lm_head(params, hidden, cfg).astype(jnp.float32)
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return jnp.sum(nll), jnp.sum(valid.astype(jnp.float32))
+
+
+def loss_fn(params, batch, cfg, *, masks=None, want_taps=False):
+    hidden, taps, aux = forward(params, batch, cfg, masks=masks,
+                                want_taps=want_taps)
+    loss = ce_loss(params, hidden, batch["labels"], cfg)
+    return loss + aux, {"ce": loss, "aux": aux, "taps": taps}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(params, cfg, batch: int, s_max: int, *, rolling=False):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.cross_attn_every:
+        g = cfg.n_layers // cfg.cross_attn_every
+        ns = cfg.cross_attn_every - 1
+        mk = lambda: attn.init_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dt,
+                                     rolling=rolling)
+        kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (g, ns, *x.shape)).copy(), mk())
+        p, dh = cfg.n_img_tokens, cfg.head_dim
+        cross = (jnp.zeros((g, batch, p, cfg.n_kv_heads, dh), dt),
+                 jnp.zeros((g, batch, p, cfg.n_kv_heads, dh), dt))
+        return DecodeCache(kv=kv, cross_kv=cross, t=jnp.zeros((), jnp.int32))
+    mk = attn.init_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dt,
+                         rolling=rolling)
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)).copy(), mk)
+    return DecodeCache(kv=kv, cross_kv=None, t=jnp.zeros((), jnp.int32))
+
+
+def prefill(params, batch, cfg, cache: DecodeCache, *, masks=None):
+    """Run the prompt, filling caches. Returns (last-token logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(S)
+    if cfg.cross_attn_every:
+        params = dict(params)
+        params["_img_states"] = batch["img"].astype(x.dtype)
+        # precompute per-group cross KV
+        ck = jax.vmap(lambda pc: attn.precompute_cross_kv(
+            pc["attn"], batch["img"].astype(x.dtype), cfg))(params["cross_layers"])
+        params["_cross_kv"] = ck
+        x, new_kv, _, _ = _scan_layers(params, x, positions, cfg, masks=masks,
+                                       want_taps=False, mode="prefill",
+                                       cache=cache.kv)
+        new_cache = DecodeCache(kv=new_kv, cross_kv=ck,
+                                t=jnp.asarray(S, jnp.int32))
+    else:
+        x, new_kv, _, _ = _scan_layers(params, x, positions, cfg, masks=masks,
+                                       want_taps=False, mode="prefill",
+                                       cache=cache.kv)
+        new_cache = DecodeCache(kv=new_kv, cross_kv=None,
+                                t=jnp.asarray(S, jnp.int32))
+    x = _apply_norm(params["ln_f"], x[:, -1:], cfg)
+    return lm_head(params, x, cfg), new_cache
+
+
+def decode_step(params, token, cfg, cache: DecodeCache, *, masks=None):
+    """One decode step. token: (B,1) int32. Returns (logits (B,1,V), cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.cross_attn_every:
+        params = dict(params)
+        params["_img_states"] = None
+        params["_cross_kv"] = cache.cross_kv
+    x, new_kv, _, _ = _scan_layers(params, x, None, cfg, masks=masks,
+                                   want_taps=False, mode="decode",
+                                   cache=cache.kv, t=cache.t)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    new_cache = DecodeCache(kv=new_kv, cross_kv=cache.cross_kv, t=cache.t + 1)
+    return lm_head(params, x, cfg), new_cache

@@ -1,0 +1,260 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+The shared block (a full attn+MLP transformer block) has a single set of
+weights invoked every ``cfg.shared_attn_every`` backbone layers, zamba
+style: its input is concat([hidden, embedding]) (2*D wide). Because the
+weights are shared across invocation sites, their pruning Gram is the SUM
+of per-site Grams — which the scan emits naturally (taps are per-layer
+outputs, zero at non-invocation layers, summed by the pruning pipeline).
+That sum is exactly the right objective since the layer-wise loss sums
+over sites (DESIGN §4).
+
+Serving: Mamba states are O(1); the shared block keeps one KV cache per
+invocation site. For long_500k the shared caches are rolling windows of
+``cfg.long_window`` — the whole point of the hybrid being sub-quadratic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import attention as attn
+from . import common
+from . import mamba2
+from . import mlp as mlp_lib
+from .transformer import _apply_norm, _norm_params, ce_loss, lm_head
+
+
+class ZambaCache(NamedTuple):
+    ssm: mamba2.SSMCache       # leaves stacked (L, ...)
+    shared_kv: attn.KVCache    # leaves stacked (n_sites, ...)
+    t: jnp.ndarray
+
+
+def n_sites(cfg) -> int:
+    return (cfg.n_layers + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+
+
+def init_shared_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    d2 = 2 * cfg.d_model
+    return {
+        "ln1": _norm_params(cfg, d2),
+        "attn": attn.init_attn_params(k1, cfg, d_in=d2),
+        "ln2": _norm_params(cfg, d2),
+        "mlp": mlp_lib.init_mlp_params(k2, cfg, d_in=d2),
+    }
+
+
+def init_layer(key, cfg) -> dict:
+    return {"ln": _norm_params(cfg), "mamba": mamba2.init_mamba_params(key, cfg)}
+
+
+def init_params(key, cfg) -> dict:
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    layers = [init_layer(k, cfg) for k in jax.random.split(kl, cfg.n_layers)]
+    return {
+        "embed": common.normal_init(ke, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "shared": init_shared_block(ks, cfg),
+        "ln_f": _norm_params(cfg),
+        "head": common.normal_init(kh, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-layer bodies
+# ---------------------------------------------------------------------------
+
+def shared_block(p, x, x0, positions, cfg, *, masks=None, want_taps=False,
+                 mode="train", cache=None, t=None):
+    """The shared attn+MLP block on concat([x, x0]). Returns (x, cache, taps)."""
+    taps = {} if want_taps else None
+    g = (lambda n: None) if masks is None else masks.get
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h = _apply_norm(p["ln1"], h2, cfg)
+    if mode == "decode":
+        a, new_cache = attn.decode_attention(p["attn"], h, t, cfg, cache,
+                                             masks=g("attn"), taps=taps)
+    else:
+        a, new_cache = attn.self_attention(p["attn"], h, positions, cfg,
+                                           masks=g("attn"), taps=taps,
+                                           cache=cache, mode=mode)
+    x = x + a
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h = _apply_norm(p["ln2"], h2, cfg)
+    f = mlp_lib.mlp_block(p["mlp"], h, cfg, masks=g("mlp"), taps=taps)
+    x = x + f
+    return x, new_cache, (taps or {})
+
+
+def mamba_layer(p, x, cfg, *, masks=None, want_taps=False):
+    taps = {} if want_taps else None
+    mm = None if masks is None else masks.get("mamba")
+    h = _apply_norm(p["ln"], x, cfg)
+    x = x + mamba2.mamba_block(p["mamba"], h, cfg, masks=mm, taps=taps)
+    x = constrain(x, "batch", "seq", None)
+    return x, (taps or {})
+
+
+def _zero_shared_taps(cfg) -> dict:
+    d2, f, hdh = 2 * cfg.d_model, cfg.d_ff, cfg.n_heads * cfg.head_dim
+    z = lambda d: {"g": jnp.zeros((d, d), jnp.float32),
+                   "s": jnp.zeros((d,), jnp.float32),
+                   "n": jnp.float32(0.0)}
+    return {"wq": z(d2), "wk": z(d2), "wv": z(d2), "wo": z(hdh),
+            "w_gate": z(d2), "w_up": z(d2), "w_down": z(f)}
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg, *, masks=None, want_taps=False):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    x0 = x
+    positions = jnp.arange(tokens.shape[1])
+    m_layers = None if masks is None else masks["layers"]
+    m_shared = None if masks is None else masks.get("shared")
+    every = cfg.shared_attn_every
+
+    def body(carry, xs):
+        xc = carry
+        pl_, ml_, idx = xs
+
+        def with_shared(xc):
+            xs_, _, taps_s = shared_block(params["shared"], xc, x0, positions,
+                                          cfg, masks=m_shared,
+                                          want_taps=want_taps, mode="train")
+            return xs_, taps_s if want_taps else {}
+
+        def without_shared(xc):
+            return xc, _zero_shared_taps(cfg) if want_taps else {}
+
+        xc, taps_s = jax.lax.cond(idx % every == 0, with_shared,
+                                  without_shared, xc)
+        xc, taps_m = mamba_layer(pl_, xc, cfg, masks=ml_, want_taps=want_taps)
+        return xc, {"shared": taps_s, "mamba": taps_m}
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, taps = common.scan(
+        body, x, (params["layers"], m_layers, jnp.arange(cfg.n_layers)),
+        cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    return x, taps, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, *, masks=None, want_taps=False):
+    hidden, taps, aux = forward(params, batch, cfg, masks=masks,
+                                want_taps=want_taps)
+    loss = ce_loss(params, hidden, batch["labels"], cfg)
+    return loss, {"ce": loss, "aux": aux, "taps": taps}
+
+
+def init_decode_cache(params, cfg, batch: int, s_max: int, *, rolling=False):
+    dt = jnp.dtype(cfg.dtype)
+    L, ns = cfg.n_layers, n_sites(cfg)
+    ssm = mamba2.init_ssm_cache(batch, cfg, dt)
+    ssm = jax.tree.map(lambda x: jnp.broadcast_to(x, (L, *x.shape)).copy(), ssm)
+    w = min(s_max, cfg.long_window) if rolling else s_max
+    kv = attn.init_cache(batch, w, cfg.n_kv_heads, cfg.head_dim, dt,
+                         rolling=rolling)
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (ns, *x.shape)).copy(), kv)
+    return ZambaCache(ssm=ssm, shared_kv=kv, t=jnp.zeros((), jnp.int32))
+
+
+def prefill(params, batch, cfg, cache: ZambaCache, *, masks=None):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x0 = x
+    positions = jnp.arange(tokens.shape[1])
+    m_layers = None if masks is None else masks["layers"]
+    m_shared = None if masks is None else masks.get("shared")
+    every = cfg.shared_attn_every
+
+    def body(carry, xs):
+        xc, shared_kv = carry
+        pl_, ml_, ssm_l, idx = xs
+        site = idx // every
+
+        def with_shared(args):
+            xc, shared_kv = args
+            cache_site = jax.tree.map(lambda c: c[site], shared_kv)
+            xs_, new_kv, _ = shared_block(params["shared"], xc, x0, positions,
+                                          cfg, masks=m_shared, mode="prefill",
+                                          cache=cache_site)
+            shared_kv = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), site, 0),
+                shared_kv, new_kv)
+            return xs_, shared_kv
+
+        def without_shared(args):
+            return args
+
+        xc, shared_kv = jax.lax.cond(idx % every == 0, with_shared,
+                                     without_shared, (xc, shared_kv))
+        mm = None if ml_ is None else ml_.get("mamba")
+        h = _apply_norm(pl_["ln"], xc, cfg)
+        out, new_ssm = mamba2.mamba_block(pl_["mamba"], h, cfg, masks=mm,
+                                          return_cache=True)
+        xc = xc + out
+        return (xc, shared_kv), new_ssm
+
+    (x, shared_kv), new_ssm = common.scan(
+        body, (x, cache.shared_kv),
+        (params["layers"], m_layers, cache.ssm, jnp.arange(cfg.n_layers)),
+        cfg=cfg)
+    x = _apply_norm(params["ln_f"], x[:, -1:], cfg)
+    new_cache = ZambaCache(ssm=new_ssm, shared_kv=shared_kv,
+                           t=jnp.asarray(tokens.shape[1], jnp.int32))
+    return lm_head(params, x, cfg), new_cache
+
+
+def decode_step(params, token, cfg, cache: ZambaCache, *, masks=None):
+    x = jnp.take(params["embed"], token, axis=0)
+    x0 = x
+    m_layers = None if masks is None else masks["layers"]
+    m_shared = None if masks is None else masks.get("shared")
+    every = cfg.shared_attn_every
+
+    def body(carry, xs):
+        xc, shared_kv = carry
+        pl_, ml_, ssm_l, idx = xs
+        site = idx // every
+
+        def with_shared(args):
+            xc, shared_kv = args
+            cache_site = jax.tree.map(lambda c: c[site], shared_kv)
+            xs_, new_kv, _ = shared_block(params["shared"], xc, x0, None, cfg,
+                                          masks=m_shared, mode="decode",
+                                          cache=cache_site, t=cache.t)
+            shared_kv = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), site, 0),
+                shared_kv, new_kv)
+            return xs_, shared_kv
+
+        def without_shared(args):
+            return args
+
+        xc, shared_kv = jax.lax.cond(idx % every == 0, with_shared,
+                                     without_shared, (xc, shared_kv))
+        mm = None if ml_ is None else ml_.get("mamba")
+        h = _apply_norm(pl_["ln"], xc, cfg)
+        out, new_ssm = mamba2.mamba_decode(pl_["mamba"], h, ssm_l, cfg, masks=mm)
+        xc = xc + out
+        return (xc, shared_kv), new_ssm
+
+    (x, shared_kv), new_ssm = common.scan(
+        body, (x, cache.shared_kv),
+        (params["layers"], m_layers, cache.ssm, jnp.arange(cfg.n_layers)),
+        cfg=cfg)
+    x = _apply_norm(params["ln_f"], x, cfg)
+    new_cache = ZambaCache(ssm=new_ssm, shared_kv=shared_kv, t=cache.t + 1)
+    return lm_head(params, x, cfg), new_cache

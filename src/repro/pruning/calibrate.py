@@ -1,0 +1,70 @@
+"""Calibration: accumulate per-layer Gram statistics in dense forward passes.
+
+SparseSwaps (like Wanda/RIA/DSnoT) does not update surviving weights, so
+every layer's calibration input is the *dense* model's activation — all
+layers' Gram matrices accumulate in ONE forward pass per batch (paper
+§2.1.2 "accumulated on-the-fly as calibration samples pass through the
+layer"), not layer-by-layer. The taps mechanism (models/common.dense)
+emits {g, s, n} per prunable site; summing over batches is exact because
+G, Σx and counts are additive.
+
+Fault tolerance: ``checkpoint_every`` persists the partial accumulator via
+``repro.ckpt`` so a preempted calibration job resumes at the last saved
+batch instead of restarting (DESIGN §6).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+
+
+def make_tap_step(api: ModelApi):
+    """jit'd (params, batch) -> taps pytree for one calibration batch."""
+
+    @jax.jit
+    def step(params, batch):
+        _, aux = api.loss(params, batch, masks=None, want_taps=True)
+        return aux["taps"]
+
+    return step
+
+
+def accumulate(api: ModelApi, params, batches: Iterable[dict], *,
+               checkpoint_every: int = 0,
+               checkpoint_fn: Callable[[int, dict], None] | None = None,
+               resume_from: tuple[int, dict] | None = None) -> dict:
+    """Sum tap statistics over calibration batches (streaming, O(state))."""
+    step = make_tap_step(api)
+    start, total = resume_from if resume_from is not None else (0, None)
+    i = start - 1
+    for i, batch in enumerate(batches):
+        if i < start:
+            continue
+        t = step(params, batch)
+        total = t if total is None else jax.tree.map(jnp.add, total, t)
+        if checkpoint_every and checkpoint_fn and (i + 1) % checkpoint_every == 0:
+            checkpoint_fn(i + 1, total)
+    if total is None:
+        raise ValueError("no calibration batches provided")
+    return total
+
+
+def calibration_batches(cfg_arch, *, n_samples: int, seq_len: int,
+                        batch_size: int, seed: int = 0):
+    """The paper's calibration protocol on the synthetic corpus:
+    ``n_samples`` sequences of ``seq_len`` tokens, drawn from the calib
+    split (keyed deterministically — restart-replayable)."""
+    from repro.data import synthetic
+
+    corpus = synthetic.CorpusConfig(cfg_arch.vocab_size, seed=seed)
+    n_batches = (n_samples + batch_size - 1) // batch_size
+    key = jax.random.key(seed)
+    for i in range(n_batches):
+        pipe = synthetic.DataPipeline(corpus, batch_size, seq_len, split="calib")
+        batch = pipe.get(i)
+        batch = synthetic.with_modality(batch, cfg_arch, jax.random.fold_in(key, i))
+        yield batch

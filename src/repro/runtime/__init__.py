@@ -1,0 +1,4 @@
+"""Fault-tolerance runtime: retries, heartbeats, preemption, stragglers."""
+from .fault_tolerance import Heartbeat, PreemptionGuard, StragglerMonitor, retry
+
+__all__ = ["Heartbeat", "PreemptionGuard", "StragglerMonitor", "retry"]

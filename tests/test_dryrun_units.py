@@ -1,0 +1,118 @@
+"""Dry-run machinery unit tests (no 512-device init — pure helpers).
+
+The actual 512-way lower+compile runs via launch/dryrun.py (results in
+results/dryrun/); test_dryrun_subprocess covers one cell end-to-end.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_shape_cells_and_skips():
+    runs = {c.name for c in configs.shape_cells(configs.get("rwkv6-1.6b"))}
+    assert "long_500k" in runs
+    skips = configs.cell_skips(configs.get("granite-34b"))
+    assert skips and skips[0][0].name == "long_500k"
+    total = sum(len(configs.shape_cells(configs.get(a)))
+                + len(configs.cell_skips(configs.get(a)))
+                for a in configs.ASSIGNED)
+    assert total == 40                     # the full assigned grid
+
+
+def test_parse_collectives_synthetic():
+    from repro.launch import dryrun
+    hlo = textwrap.dedent("""
+      ENTRY %main {
+        %p0 = f32[16,64]{1,0} parameter(0)
+        %ag = f32[128,64]{1,0} all-gather(f32[16,64]{1,0} %p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+        %ar = f32[128,64]{1,0} all-reduce(f32[128,64]{1,0} %ag), replica_groups={{0,1},{2,3},{4,5},{6,7}}, to_apply=%add
+        %cp = f32[16,64]{1,0} collective-permute(f32[16,64]{1,0} %p0), source_target_pairs={{0,4},{4,0}}
+        ROOT %t = (f32[128,64]{1,0}) tuple(f32[128,64]{1,0} %ar)
+      }
+    """)
+    out = dryrun.parse_collectives(hlo, n_devices=8, pod_size=4)
+    assert out["count"] == 3
+    assert out["ops"]["all-gather"] == 16 * 64 * 4
+    assert out["ops"]["all-reduce"] == 128 * 64 * 4
+    # the all-gather's group {0..7} crosses the pod boundary at 4
+    assert out["dcn"] >= 16 * 64 * 4
+    # the all-reduce groups stay inside pods -> ICI
+    assert out["ici"] >= 128 * 64 * 4
+
+
+def test_leaf_pspec_divisibility_fallback():
+    from repro.dist import specs as specs_lib
+    cfg = configs.get("granite-moe-3b-a800m")
+    mesh_stub = type("M", (), {"shape": {"data": 16, "model": 16}})()
+    # vocab 49155 isn't divisible by 16 -> embed dim0 replicated
+    s = specs_lib.leaf_pspec(["embed"], (49155, 1536), cfg, mesh_stub)
+    assert s[0] is None and s[1] == "data"
+    # a regular weight gets (model, data) on its two largest dims
+    s2 = specs_lib.leaf_pspec(["layers", "attn", "wq"], (32, 2048, 1536),
+                              cfg, mesh_stub)
+    assert s2 == jax.sharding.PartitionSpec(None, "model", "data")
+
+
+def test_input_specs_shapes():
+    from repro.launch import dryrun
+    cfg = configs.get("chatglm3-6b")
+    cell = configs.SHAPES["decode_32k"]
+    params, token, cache = dryrun.input_specs(cfg, cell)
+    assert token.shape == (128, 1)
+    kv = cache.kv
+    assert kv.k.shape == (cfg.n_layers, 128, 32768, cfg.n_kv_heads,
+                          cfg.head_dim)
+    cell_t = configs.SHAPES["train_4k"]
+    state, batch = dryrun.input_specs(cfg, cell_t)
+    assert batch["tokens"].shape == (256, 4096)
+
+
+def test_reduced_layers_respects_groups():
+    from repro.launch import dryrun
+    vlm = configs.get("llama-3.2-vision-90b")
+    r = dryrun.reduced_layers(vlm, 2)
+    assert r.n_layers % vlm.cross_attn_every == 0 and r.n_layers >= 1
+    z = configs.get("zamba2-7b")
+    r2 = dryrun.reduced_layers(z, 2)
+    assert r2.n_layers >= 1
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess():
+    """Full 512-device lower+compile of one small cell, in a subprocess."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "rwkv6-1.6b",
+         "--cell", "decode_32k", "--mesh", "multi"],
+        capture_output=True, text=True, env=env, timeout=580)
+    assert "[ok ] rwkv6-1.6b" in out.stdout, out.stdout + out.stderr[-2000:]
+
+
+def test_dryrun_results_if_present():
+    """Validate any already-produced dry-run artifacts (full sweep runs
+    outside pytest; see results/dryrun)."""
+    root = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not root.exists():
+        pytest.skip("no dry-run results yet")
+    n = 0
+    for mesh in ("16x16", "2x16x16"):
+        for f in root.glob(f"{mesh}/*.json"):
+            data = json.loads(f.read_text())
+            if not data["ok"]:
+                continue
+            n += 1
+            assert data["flops"] > 0
+            assert data["roofline"]["roofline_s"] > 0
+    assert n > 0

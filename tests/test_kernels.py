@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_problem
+from repro.core import masks as masks_lib
+from repro.core import swap_math as sm
+from repro.core.warmstart import warmstart_mask
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("d_out,d_in", [(4, 64), (16, 96), (7, 130),
+                                        (16, 256), (33, 300)])
+def test_swap_argmin_shapes(rng, d_out, d_in):
+    W, _, G = make_problem(rng, d_out=d_out, d_in=d_in)
+    m = warmstart_mask(W, G, masks_lib.PerRow(0.5), "wanda")
+    c = sm.correlation_vector(W, m, G)
+    want = ref.swap_argmin_ref(W, m, c, G)
+    got = ops.swap_argmin(W, m, c, G, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-4)
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert np.array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swap_argmin_dtypes(rng, dtype):
+    W, _, G = make_problem(rng, d_out=8, d_in=128)
+    W = W.astype(dtype)
+    m = warmstart_mask(W.astype(jnp.float32), G, masks_lib.PerRow(0.5), "wanda")
+    c = sm.correlation_vector(W.astype(jnp.float32), m, G)
+    want = ref.swap_argmin_ref(W.astype(jnp.float32), m, c, G)
+    got = ops.swap_argmin(W, m, c, G, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_swap_argmin_tiling_invariance(rng):
+    """Different tile/row-block choices give identical results."""
+    W, _, G = make_problem(rng, d_out=12, d_in=256)
+    m = warmstart_mask(W, G, masks_lib.PerRow(0.6), "wanda")
+    c = sm.correlation_vector(W, m, G)
+    base = ops.swap_argmin(W, m, c, G, interpret=True)
+    for rb, tile in [(4, 128), (8, 256), (16, 128)]:
+        got = ops.swap_argmin(W, m, c, G, row_block=rb, tile=tile,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(base[0]),
+                                   rtol=1e-6)
+        assert np.array_equal(np.asarray(got[1]), np.asarray(base[1]))
+        assert np.array_equal(np.asarray(got[2]), np.asarray(base[2]))
+
+
+def test_swap_argmin_deterministic_tiebreak():
+    """Equal ΔL candidates resolve to the smallest flat index."""
+    d = 128
+    W = jnp.ones((2, d), jnp.float32)
+    G = jnp.eye(d, dtype=jnp.float32)          # orthogonal features: ties
+    m = jnp.zeros((2, d)).at[:, : d // 2].set(1.0)
+    c = sm.correlation_vector(W, m, G)
+    want = ref.swap_argmin_ref(W, m, c, G)
+    got = ops.swap_argmin(W, m, c, G, interpret=True)
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert np.array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@pytest.mark.parametrize("T,d", [(64, 32), (130, 48), (512, 96), (100, 128)])
+def test_gram_kernel_shapes(rng, T, d):
+    x = jnp.asarray(rng.normal(size=(T, d)).astype(np.float32))
+    got = ops.gram_xtx(x, interpret=True)
+    want = ref.gram_xtx_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel_dtypes(rng, dtype):
+    x = jnp.asarray(rng.normal(size=(256, 64))).astype(dtype)
+    got = ops.gram_xtx(x, interpret=True)
+    assert got.dtype == jnp.float32            # fp32 accumulation contract
+    want = ref.gram_xtx_ref(x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=0.5)
+
+
+def test_gram_kernel_batched_layout(rng):
+    x = jnp.asarray(rng.normal(size=(2, 17, 40)).astype(np.float32))
+    got = ops.gram_xtx(x, interpret=True)
+    x2 = np.asarray(x).reshape(-1, 40)
+    np.testing.assert_allclose(np.asarray(got), x2.T @ x2, rtol=1e-4,
+                               atol=1e-2)
+
+
+def test_gram_update_streaming(rng):
+    xs = [jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+          for _ in range(3)]
+    G = jnp.zeros((32, 32), jnp.float32)
+    for x in xs:
+        G = ops.gram_update(G, x, interpret=True)
+    full = np.concatenate([np.asarray(x) for x in xs], 0)
+    np.testing.assert_allclose(np.asarray(G), full.T @ full, rtol=1e-4,
+                               atol=1e-2)

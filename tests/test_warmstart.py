@@ -1,0 +1,87 @@
+"""Warmstart criteria, incl. the paper's Wanda = Jensen-bound derivation."""
+import numpy as np
+import jax.numpy as jnp
+
+from conftest import make_problem
+from repro.core import masks as masks_lib
+from repro.core import warmstart
+from repro.core.gram import feature_norms
+
+
+def jensen_upper_bound(W, m, G):
+    """Eq. 4: sum_j (1-m_ij)^2 w_ij^2 ||X_j||^2 (per row)."""
+    scale = np.asarray(feature_norms(G)) ** 2
+    W = np.asarray(W, np.float64)
+    m = np.asarray(m, np.float64)
+    return np.sum(((1 - m) * W) ** 2 * scale[None, :], axis=1)
+
+
+def test_wanda_minimizes_jensen_bound(rng):
+    """The Wanda mask is the exact minimizer of the Eq. 4 upper bound."""
+    W, _, G = make_problem(rng, d_out=6, d_in=32)
+    pat = masks_lib.PerRow(0.5)
+    m_w = warmstart.warmstart_mask(W, G, pat, "wanda")
+    bound_w = jensen_upper_bound(W, m_w, G)
+    rng2 = np.random.default_rng(3)
+    keep = pat.keep_per_row(32)
+    for _ in range(50):  # random feasible masks never beat it
+        m_r = np.zeros((6, 32), np.float32)
+        for r in range(6):
+            m_r[r, rng2.choice(32, keep, replace=False)] = 1
+        assert np.all(jensen_upper_bound(W, m_r, G) >= bound_w - 1e-6)
+
+
+def test_jensen_is_upper_bound(rng):
+    """Eq. 3 <= Eq. 4 for any mask (Jensen direction)."""
+    W, X, G = make_problem(rng, d_out=6, d_in=24)
+    from repro.core import swap_math as sm
+    rng2 = np.random.default_rng(4)
+    for _ in range(20):
+        m = (rng2.random((6, 24)) > 0.5).astype(np.float32)
+        exact = np.asarray(sm.row_loss(W, jnp.asarray(m), G))
+        bound = jensen_upper_bound(W, m, G)
+        # bound is diag-only; exact includes cross terms — can exceed the
+        # bound only through NEGATIVE correlations... Jensen guarantees
+        # exact <= d_in * bound is trivial; the paper's inequality is
+        # sum over B of (sum_j a_j)^2 <= B * ... — verify elementwise form:
+        # here we verify exact <= bound * d_in (loose) and the tight
+        # Cauchy-Schwarz form with the actual support size.
+        support = np.sum((1 - m), axis=1)
+        assert np.all(exact <= bound * np.maximum(support, 1) + 1e-3)
+
+
+def test_magnitude_ignores_activations(rng):
+    W, _, G = make_problem(rng, d_out=4, d_in=16)
+    m1 = warmstart.warmstart_mask(W, G, masks_lib.PerRow(0.5), "magnitude")
+    m2 = warmstart.warmstart_mask(W, 1000.0 * G, masks_lib.PerRow(0.5),
+                                  "magnitude")
+    assert bool(jnp.all(m1 == m2))
+
+
+def test_wanda_uses_activations(rng):
+    """Scaling one feature's activations flips Wanda decisions."""
+    W, _, G = make_problem(rng, d_out=8, d_in=16)
+    m1 = warmstart.warmstart_mask(W, G, masks_lib.PerRow(0.5), "wanda")
+    G2 = np.asarray(G).copy()
+    G2[3, :] *= 10_000.0
+    G2[:, 3] *= 10_000.0
+    m2 = warmstart.warmstart_mask(W, jnp.asarray(G2), masks_lib.PerRow(0.5),
+                                  "wanda")
+    assert bool(jnp.all(m2[:, 3] == 1.0))          # outlier feature kept
+    assert not bool(jnp.all(m1 == m2))
+
+
+def test_ria_relative_importance(rng):
+    W, _, G = make_problem(rng, d_out=6, d_in=24)
+    for pat in (masks_lib.PerRow(0.5), masks_lib.NM(2, 4)):
+        m = warmstart.warmstart_mask(W, G, pat, "ria")
+        assert masks_lib.validate_mask(m, pat)
+
+
+def test_all_criteria_feasible(rng):
+    W, _, G = make_problem(rng, d_out=5, d_in=40)
+    for crit in ("magnitude", "wanda", "ria"):
+        for pat in (masks_lib.PerRow(0.3), masks_lib.PerRow(0.8),
+                    masks_lib.NM(1, 4), masks_lib.NM(4, 8)):
+            m = warmstart.warmstart_mask(W, G, pat, crit)
+            assert masks_lib.validate_mask(m, pat), (crit, pat)
