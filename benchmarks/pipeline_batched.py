@@ -1,0 +1,92 @@
+"""Engine wall-clock: per-instance vs group-batched vs rows-sharded.
+
+Times ``prune_model`` end-to-end (all site groups, sparseswaps, fixed
+t_max) on a tiny llama31-8b under the three execution paths the engine
+refactor introduced:
+
+* ``per_instance``  — the reference Python loop (one jit per matrix);
+* ``group_batched`` — one vmapped jit per SiteGroup (the default);
+* ``rows_sharded``  — the mesh dispatch through
+  ``distributed.refine_rows_sharded`` on every local device.
+
+Emits ``BENCH_pipeline.json`` at the repo root so later PRs accumulate a
+perf trajectory (``cold_s`` includes compilation; ``wall_s`` is the best
+warm repeat). Run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to give the
+sharded variant a real mesh; the flag below is only a default.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks as masks_lib
+from repro.launch import mesh as mesh_lib
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_pipeline.json"
+
+
+def _bench_cfg(arch: str):
+    """Tiny-family config scaled so batching has something to amortize."""
+    return configs.get_tiny(arch).replace(
+        d_model=128, d_ff=384, n_layers=4, n_heads=4, n_kv_heads=2,
+        d_head=32, vocab_size=512, dtype="float32")
+
+
+def run(arch: str = "llama31-8b", *, t_max: int = 20, sparsity: float = 0.6,
+        repeats: int = 3, verbose: bool = True) -> dict:
+    cfg = _bench_cfg(arch)
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    batches = list(pruning.calibration_batches(cfg, n_samples=8, seq_len=64,
+                                               batch_size=4))
+    taps = pruning.accumulate(api, params, batches)
+    pat = masks_lib.PerRow(sparsity)
+    mesh = mesh_lib.make_host_mesh()
+
+    # chunked everywhere: the one backend all three paths share, so the
+    # comparison isolates batching/sharding rather than the swap search
+    variants = {
+        "per_instance": dict(engine_mode="reference", swap_method="chunked"),
+        "group_batched": dict(engine_mode="batched", swap_method="chunked"),
+        "rows_sharded": dict(engine_mode="batched", swap_method="chunked",
+                             mesh=mesh),
+    }
+
+    rows = []
+    for name, kw in variants.items():
+        times = []
+        for _ in range(max(repeats, 2)):
+            t0 = time.time()
+            rep = pruning.prune_model(api, params, None, pat,
+                                      method="sparseswaps", t_max=t_max,
+                                      taps=taps, **kw)
+            jax.block_until_ready(jax.tree.leaves(rep.masks))
+            times.append(time.time() - t0)
+        rows.append({"variant": name, "cold_s": times[0],
+                     "wall_s": min(times[1:]), "repeats_s": times})
+        if verbose:
+            print(f"  {name:14s} cold {times[0]:6.2f}s  "
+                  f"warm {min(times[1:]):6.2f}s")
+
+    out = {"arch": arch, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+           "t_max": t_max, "sparsity": sparsity,
+           "devices": len(jax.devices()), "rows": rows}
+    OUT.write_text(json.dumps(out, indent=1))
+    if verbose:
+        print(f"  wrote {OUT}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -49,6 +49,9 @@ class RefineResult:
 def _pick_method(method: Method, d_in: int, R: int) -> str:
     if method != "auto":
         return method
+    # the fused tiled-argmin kernel is the production path on TPU
+    if jax.default_backend() == "tpu":
+        return "pallas"
     # dense ΔL is R*d*d fp32 — keep it under ~256MB
     if R * d_in * d_in * 4 <= 256 * 2**20:
         return "dense"

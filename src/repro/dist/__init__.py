@@ -1,0 +1,19 @@
+"""repro.dist — the sharding subsystem.
+
+Two layers, matching how the rest of the codebase consumes them:
+
+* ``sharding`` — *logical-axis* rules. Model code annotates activations
+  with logical names (``constrain(x, "batch", "seq", None)``); a launcher
+  installs a rules table + mesh (``use_rules(standard_rules(...), mesh)``,
+  usually via ``launch.mesh.activate``) and every constraint lowers to a
+  ``with_sharding_constraint`` on the active mesh. With no rules installed
+  (single-device tests) every ``constrain`` is a no-op, so model code never
+  branches on distribution.
+
+* ``specs`` — *PartitionSpec derivation* for whole pytrees (params, train
+  state, decode caches, batches). This is what the dry-run harness and the
+  jit launchers feed to ``in_shardings``/``out_shardings``.
+"""
+from . import sharding, specs
+
+__all__ = ["sharding", "specs"]

@@ -1,0 +1,122 @@
+"""Logical-axis sharding rules (MaxText/t5x-style, but function-scoped).
+
+Model code names its activation dims with *logical* axes:
+
+    x = constrain(x, "batch", "seq", None)
+
+and a launcher decides what those names mean on the current hardware:
+
+    rules = standard_rules(multi_pod=True, kv_shardable=True)
+    with mesh, use_rules(rules, mesh):
+        jitted_step(...)
+
+``constrain`` resolves each logical name through the innermost installed
+rules table and emits ``jax.lax.with_sharding_constraint``. It degrades to
+an exact no-op when
+
+* no rules are installed (single-device tests / eager exploration),
+* a rule maps to a mesh axis the active mesh does not have,
+* the dim size is not divisible by the mapped axes' total size, or
+* the mapped mesh axis was already consumed by an earlier dim of the same
+  constraint (one mesh axis may appear at most once per spec — e.g. with
+  sequence parallelism *and* expert parallelism both on "model", the
+  earlier logical dim wins).
+
+Logical axes used by the model zoo: ``batch``, ``seq``, ``heads``,
+``kv_heads``, ``mlp``, ``expert``, ``vocab``.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> mesh axes (tuple) or None (replicated)
+Rules = Mapping[str, tuple[str, ...] | None]
+
+# innermost-last stack of (rules, mesh); plain list because rule scopes are
+# lexically nested context managers, never concurrent.
+_ACTIVE: list[tuple[dict, Mesh]] = []
+
+
+def standard_rules(*, multi_pod: bool = False, kv_shardable: bool = False,
+                   moe_parallelism: str = "tp",
+                   seq_parallel: bool = True) -> dict:
+    """The production rules table (mesh semantics in ``launch.mesh``).
+
+    * activations' batch dim spans every data-parallel axis;
+    * sequence parallelism puts "seq" on "model" (residual-stream tensors
+      between TP regions are seq-sharded, reduce-scatter friendly);
+    * attention heads are tensor-parallel; KV heads only when the head
+      count divides the model axis (GQA with few KV heads replicates);
+    * MoE: "tp" shards the expert FFN dim, "ep" shards the expert axis
+      itself (the two are exclusive — both map to "model"), "local" keeps
+      tiny experts fully replicated.
+    """
+    return {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "seq": ("model",) if seq_parallel else None,
+        "heads": ("model",),
+        "kv_heads": ("model",) if kv_shardable else None,
+        "mlp": ("model",) if moe_parallelism == "tp" else None,
+        "expert": ("model",) if moe_parallelism == "ep" else None,
+        "vocab": ("model",),
+    }
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules, mesh: Mesh):
+    """Install ``rules`` on ``mesh`` for the dynamic extent of the block."""
+    _ACTIVE.append((dict(rules), mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> tuple[dict, Mesh] | None:
+    """The innermost installed (rules, mesh), or None."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def logical_pspec(shape: Sequence[int], logical_axes: Sequence[str | None],
+                  rules: Rules, mesh_shape: Mapping[str, int]) -> P | None:
+    """Resolve logical names to a PartitionSpec for a concrete shape.
+
+    Returns None when every dim resolves to replicated (callers skip the
+    constraint entirely — keeps single-axis HLO clean).
+    """
+    assert len(shape) == len(logical_axes), (tuple(shape), logical_axes)
+    used: set[str] = set()
+    entries: list[tuple[str, ...] | str | None] = []
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            entries.append(None)
+            continue
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        ok = (all(a in mesh_shape and a not in used for a in axes)
+              and dim % math.prod(mesh_shape[a] for a in axes) == 0)
+        if not ok:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    if not used:
+        return None
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain ``x``'s layout by logical axis names (no-op without rules)."""
+    state = active_rules()
+    if state is None:
+        return x
+    rules, mesh = state
+    spec = logical_pspec(x.shape, logical_axes, rules, mesh.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

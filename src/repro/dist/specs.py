@@ -1,0 +1,160 @@
+"""PartitionSpec derivation for whole pytrees (params / state / cache / batch).
+
+Where ``sharding`` answers "how is THIS activation laid out" inside a traced
+step, this module answers "what ``in_shardings``/``out_shardings`` does the
+launcher pass to jit" — one spec per pytree leaf, derived from shapes:
+
+* weights — ("model", "data") on the two largest dims (tensor parallel +
+  FSDP), each guarded by divisibility against the mesh axis size; anything
+  that does not divide stays replicated (the granite-moe vocab 49155 case);
+* optimizer state — same rule as the matching param (AdamW m/v mirror the
+  param tree), scalars replicated;
+* decode caches — batch dim over the data-parallel axes, KV-head dim over
+  "model" when the head count divides it;
+* batches — leading (batch) dim over the data-parallel axes.
+
+Every function takes shape pytrees (``jax.eval_shape`` outputs or concrete
+arrays) and only reads ``mesh.shape``, so the dry-run can derive specs for
+a 512-chip mesh without touching device state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _dp_axes(mesh_shape: Mapping[str, int]) -> tuple[str, ...]:
+    """The data-parallel axes, outermost first ("pod" crosses DCN)."""
+    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+
+def _axes_size(mesh_shape: Mapping[str, int], axes: Sequence[str]) -> int:
+    return math.prod(mesh_shape[a] for a in axes)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+# ---------------------------------------------------------------------------
+# weights / train state
+# ---------------------------------------------------------------------------
+
+def leaf_pspec(path: Sequence[str], shape: Sequence[int], cfg: ArchConfig,
+               mesh, *, fsdp: bool = True) -> P:
+    """Weight-leaf spec: "model" on the largest dim, "data" on the second.
+
+    Divisibility-guarded per dim (non-dividing dims replicate rather than
+    pad), stable under ties (equal dims keep their original order, so a
+    square (d, d) weight gets (model, data) — out-dim TP, in-dim FSDP).
+    ``path`` is accepted for rule overrides by name; the base rule is
+    shape-only.
+    """
+    del path  # shape-driven; name-keyed overrides slot in here if needed
+    ms = mesh.shape
+    if len(shape) < 2:
+        return P()  # scalars / norm vectors / gates: replicate
+    order = sorted(range(len(shape)), key=lambda i: shape[i], reverse=True)
+    assign: list[str | None] = [None] * len(shape)
+    i_tp, i_dp = order[0], order[1]
+    if "model" in ms and shape[i_tp] % ms["model"] == 0:
+        assign[i_tp] = "model"
+    if fsdp and "data" in ms and shape[i_dp] % ms["data"] == 0:
+        assign[i_dp] = "data"
+    return P(*assign)
+
+
+def param_pspecs(cfg: ArchConfig, params: Any, mesh, *,
+                 fsdp: bool = True) -> Any:
+    """Spec tree matching ``params`` leaf-for-leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: leaf_pspec(_path_names(p), leaf.shape, cfg, mesh,
+                                   fsdp=fsdp),
+        params)
+
+
+def state_pspecs(cfg: ArchConfig, state: Any, mesh, *,
+                 fsdp: bool = True) -> Any:
+    """Spec tree for a TrainState (params + AdamW m/v + step).
+
+    The optimizer moments mirror the param shapes, so the weight rule
+    applies uniformly; the step counter (and any other scalar) replicates.
+    """
+    return param_pspecs(cfg, state, mesh, fsdp=fsdp)
+
+
+# ---------------------------------------------------------------------------
+# caches / batches
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ArchConfig, cache: Any, mesh, *,
+                 batch: int | None = None) -> Any:
+    """Decode-cache specs: batch dim over DP axes, KV heads over "model".
+
+    Dims are identified by size (the cache layout is (L, B, S, kv_heads,
+    head_dim)-shaped per family, with family-specific leading stacks), so
+    pass the cell's global ``batch``. First match wins per role.
+    """
+    ms = mesh.shape
+    dp = _dp_axes(ms)
+    dp_ok = dp and batch and batch % _axes_size(ms, dp) == 0
+    kv_ok = ("model" in ms and cfg.n_kv_heads
+             and cfg.n_kv_heads % ms["model"] == 0)
+
+    def leaf(l) -> P:
+        shape = tuple(l.shape)
+        if not shape:
+            return P()
+        assign: list[Any] = [None] * len(shape)
+        b_done = kv_done = False
+        for i, s in enumerate(shape):
+            if dp_ok and not b_done and s == batch:
+                assign[i] = dp if len(dp) > 1 else dp[0]
+                b_done = True
+            elif kv_ok and not kv_done and s == cfg.n_kv_heads:
+                assign[i] = "model"
+                kv_done = True
+        return P(*assign)
+
+    return jax.tree.map(leaf, cache)
+
+
+def batch_pspecs(cfg: ArchConfig, batch: Any, mesh) -> Any:
+    """Input-batch specs: leading dim over the DP axes, rest replicated."""
+    ms = mesh.shape
+    dp = _dp_axes(ms)
+    dp_size = _axes_size(ms, dp) if dp else 0
+
+    def leaf(l) -> P:
+        shape = tuple(l.shape)
+        if not shape or not dp or shape[0] % dp_size:
+            return P(*([None] * len(shape)))
+        lead = dp if len(dp) > 1 else dp[0]
+        return P(lead, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+def named(mesh, tree: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    is_spec = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if is_spec(s) else s,
+        tree, is_leaf=is_spec)

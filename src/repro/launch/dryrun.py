@@ -4,10 +4,14 @@ MUST set the host-device count before ANY other import touches jax — the
 device count locks on first backend init.
 """
 import os
+import re as _re
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+# authoritative: drop any inherited device-count flag (e.g. the CI-wide
+# 8-device setting) so the 512-way mesh always materializes
+_flags = _re.sub(r"--xla_force_host_platform_device_count=\d+\s*", "",
+                 os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + _flags)
 
 # ---------------------------------------------------------------------------
 import argparse
@@ -306,6 +310,8 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh) -> tuple:
 
 def _cost(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):        # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

@@ -38,10 +38,19 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
           t_max: int = 50, n_calib: int = 16, calib_seq: int = 128,
           calib_batch: int = 4, from_ckpt: str | None = None,
           out_dir: str | None = None, seed: int = 0,
-          calib_ckpt_every: int = 0, verbose: bool = True) -> dict:
+          calib_ckpt_every: int = 0, mesh: str | None = None,
+          verbose: bool = True) -> dict:
+    """``mesh``: None (single device), "host" (all local devices), or
+    "production" — sparseswaps refinement then runs row-sharded via
+    repro.dist (other methods have no distributed refiner and warn)."""
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
     pat = parse_pattern(pattern) if isinstance(pattern, str) else pattern
+    mesh_obj = None
+    if mesh:
+        from repro.launch import mesh as mesh_lib
+        mesh_obj = (mesh_lib.make_production_mesh() if mesh == "production"
+                    else mesh_lib.make_host_mesh())
 
     params = api.init(jax.random.key(seed))
     if from_ckpt:
@@ -69,7 +78,7 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
                               checkpoint_fn=ckpt_fn)
     report = pruning.prune_model(api, params, None, pat, method=method,
                                  warmstart=warmstart, t_max=t_max, taps=taps,
-                                 progress=verbose)
+                                 mesh=mesh_obj, progress=verbose)
     dense_eval = pruning.evaluate(api, params, seed=seed)
     eval_params = report.updated_params if report.updated_params is not None \
         else params
@@ -113,11 +122,13 @@ def main(argv=None):
     ap.add_argument("--from-ckpt", default=None)
     ap.add_argument("--out-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, choices=["host", "production"],
+                    help="shard refinement over a device mesh (repro.dist)")
     args = ap.parse_args(argv)
     prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
           warmstart=args.warmstart, method=args.method, t_max=args.t_max,
           n_calib=args.n_calib, from_ckpt=args.from_ckpt,
-          out_dir=args.out_dir, seed=args.seed)
+          out_dir=args.out_dir, seed=args.seed, mesh=args.mesh)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,16 @@
 """Pruning pipeline: calibrate -> warmstart -> refine (SparseSwaps) -> apply."""
 from .calibrate import accumulate, calibration_batches, make_tap_step
+from .engine import (GroupResult, RefineContext, refine_group,
+                     refine_group_reference, register)
 from .evaluate import evaluate, perplexity, top1_accuracy, val_batches
 from .pipeline import PruneReport, SiteReport, apply, prune_model
-from .sites import (GramStats, SiteGroup, build_mask_tree, enumerate_sites,
-                    prunable_param_count)
+from .sites import (GramBatch, GramStats, SiteGroup, build_mask_tree,
+                    enumerate_sites, prunable_param_count)
 
 __all__ = [
-    "GramStats", "PruneReport", "SiteGroup", "SiteReport", "accumulate",
-    "apply", "build_mask_tree", "calibration_batches", "enumerate_sites",
-    "evaluate", "make_tap_step", "perplexity", "prunable_param_count",
-    "prune_model", "top1_accuracy", "val_batches",
+    "GramBatch", "GramStats", "GroupResult", "PruneReport", "RefineContext",
+    "SiteGroup", "SiteReport", "accumulate", "apply", "build_mask_tree",
+    "calibration_batches", "enumerate_sites", "evaluate", "make_tap_step",
+    "perplexity", "prunable_param_count", "prune_model", "refine_group",
+    "refine_group_reference", "register", "top1_accuracy", "val_batches",
 ]

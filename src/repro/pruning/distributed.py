@@ -119,7 +119,7 @@ def refine_g_sharded(W, G, mask_init, pattern: masks_lib.Pattern, mesh,
         R = w.shape[0]
         idx = 0
         for ax in axes:                     # flattened linear device index
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         start = idx * cols
         # c = G @ wp  =>  c_own = G[own, :] @ wp; by symmetry
         # G[own, j] = G[j, own] = g_cols[j, :], so c_own = wp @ g_cols.

@@ -7,11 +7,19 @@ This is the paper's workflow as a first-class framework feature:
     masks  = report.masks                 # pytree for loss(..., masks=masks)
     params = apply(params, masks)         # hard-zeroed weights
 
-Methods:
+Methods (the ``engine`` registry):
     "none"        warmstart mask only (= Wanda / RIA / magnitude baselines)
     "sparseswaps" the paper's 1-swap refinement (monotone, exact)
     "dsnot"       DSnoT baseline (surrogate-driven swaps)
     "sparsegpt"   SparseGPT baseline (mask + OBS weight update)
+
+Each SiteGroup refines as ONE group-batched jit call over its stacked
+(N, d_out, d_in) weights (``engine.refine_group``); pass ``mesh=`` to route
+sparseswaps refinement through the sharded refiners in
+``pruning.distributed`` (rows over every mesh axis, with the column-
+sharded-G fallback for Grams past the replication budget). The original
+per-instance Python loop survives as ``engine_mode="reference"``, tested
+bit-identical against the batched default.
 
 All per-layer losses (before/after) are recorded per site instance — the
 benchmarks for paper Fig. 1 / Tables 3-4 read them directly.
@@ -20,22 +28,23 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Iterable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.core import masks as masks_lib
-from repro.core.dsnot import dsnot as _dsnot
-from repro.core.sparsegpt import sparsegpt as _sparsegpt
-from repro.core import sparseswaps
-from repro.core import swap_math as sm
-from repro.core.warmstart import warmstart_mask
 from repro.models import ModelApi
 from repro.optim.adamw import apply_masks as apply
 
 from . import calibrate as calibrate_lib
+from . import engine as engine_lib
 from . import sites as sites_lib
+
+# reference-path alias, kept where it historically lived
+_refine_instance = engine_lib.refine_instance
 
 
 @dataclasses.dataclass
@@ -82,37 +91,14 @@ class PruneReport:
         return "\n".join(lines)
 
 
-def _refine_instance(W, gram: sites_lib.GramStats, pattern, *, method: str,
-                     warmstart: str, t_max: int, eps: float,
-                     swap_method: str, row_block):
-    """Prune one (d_out, d_in) instance. Returns (mask, l0, l1, swaps, W')."""
-    G = gram.G
-    m0 = warmstart_mask(W, G, pattern, criterion=warmstart)
-    l0 = sm.row_loss(W.astype(jnp.float32), m0, G)
-
-    if method == "none":
-        return m0, l0, l0, jnp.zeros(W.shape[0], jnp.int32), None
-
-    if method == "sparseswaps":
-        res = sparseswaps.refine(W, G, m0, pattern, t_max=t_max, eps=eps,
-                                 method=swap_method, row_block=row_block)
-        return res.mask, res.loss_init, res.loss_final, res.swaps, None
-
-    if method == "dsnot":
-        m1 = _dsnot(W, m0, gram.mean, gram.variance, gram.ex2,
-                             pattern, t_max=t_max, row_block=row_block)
-        l1 = sm.row_loss(W.astype(jnp.float32), m1, G)
-        return m1, l0, l1, jnp.zeros(W.shape[0], jnp.int32), None
-
-    if method == "sparsegpt":
-        W1, m1 = _sparsegpt(W, G, pattern)
-        # loss of the (mask + updated weights) pair w.r.t. the dense output:
-        # ||WX - W1X||^2 via G
-        diff = (W.astype(jnp.float32) - W1)
-        l1 = jnp.einsum("ri,ij,rj->r", diff, G.astype(jnp.float32), diff)
-        return m1, l0, l1, jnp.zeros(W.shape[0], jnp.int32), W1
-
-    raise ValueError(f"unknown method {method!r}")
+def _write_updated_weights(new_params: dict, g: sites_lib.SiteGroup,
+                           W1: jnp.ndarray):
+    """Insert a group's updated weight stack at its param path."""
+    W1 = W1.reshape(*g.stack_shape, *W1.shape[1:]) if g.stack_shape else W1[0]
+    node = new_params
+    for k in g.mask_path[:-1]:
+        node = node[k]
+    node[g.mask_path[-1]] = W1.astype(node[g.mask_path[-1]].dtype)
 
 
 def prune_model(
@@ -129,12 +115,31 @@ def prune_model(
     row_block: int | None = None,
     taps: dict | None = None,
     progress: bool = False,
+    mesh: Mesh | None = None,
+    gram_budget_bytes: int = engine_lib.DEFAULT_GRAM_BUDGET,
+    engine_mode: str = "batched",
 ) -> PruneReport:
-    """Full pipeline. Pass precomputed ``taps`` to skip calibration."""
+    """Full pipeline. Pass precomputed ``taps`` to skip calibration.
+
+    ``mesh`` routes sparseswaps refinement through the sharded refiners;
+    ``engine_mode`` selects "batched" (default, one jit per site group) or
+    "reference" (the per-instance loop, for verification).
+    """
     t_start = time.time()
+    if mesh is not None and method != "sparseswaps":
+        warnings.warn(
+            f"mesh= is only honored by method='sparseswaps' (no distributed "
+            f"refiner for {method!r}); refining single-device")
     if taps is None:
         taps = calibrate_lib.accumulate(api, params, calib_batches)
     groups = sites_lib.enumerate_sites(api.cfg, params, taps)
+
+    ctx = engine_lib.RefineContext(
+        warmstart=warmstart, t_max=t_max, eps=eps, swap_method=swap_method,
+        chunk=512, row_block=row_block, mesh=mesh,
+        gram_budget_bytes=gram_budget_bytes)
+    run = {"batched": engine_lib.refine_group,
+           "reference": engine_lib.refine_group_reference}[engine_mode]
 
     site_masks: dict[str, jnp.ndarray] = {}
     reports: list[SiteReport] = []
@@ -143,35 +148,19 @@ def prune_model(
         new_params = jax.tree.map(lambda x: x, params)  # shallow copy tree
 
     for g in groups:
-        masks_i, l0_i, l1_i, swaps_i, w1_i = [], [], [], [], []
-        for i in range(g.n_instances):
-            m, l0, l1, sw, w1 = _refine_instance(
-                g.weights[i], g.grams[i], pattern, method=method,
-                warmstart=warmstart, t_max=t_max, eps=eps,
-                swap_method=swap_method, row_block=row_block)
-            masks_i.append(m)
-            l0_i.append(jnp.sum(l0))
-            l1_i.append(jnp.sum(l1))
-            swaps_i.append(jnp.sum(sw))
-            if w1 is not None:
-                w1_i.append(w1)
-        site_masks[g.name] = jnp.stack(masks_i)
+        res = run(method, g, pattern, ctx)
+        site_masks[g.name] = res.masks
         reports.append(SiteReport(
             name=g.name, labels=g.labels(),
-            loss_init=jnp.stack(l0_i), loss_final=jnp.stack(l1_i),
-            swaps=jnp.stack(swaps_i)))
+            loss_init=jnp.sum(res.loss_init, axis=1),
+            loss_final=jnp.sum(res.loss_final, axis=1),
+            swaps=jnp.sum(res.swaps, axis=1)))
         if progress:
             r = reports[-1]
             print(f"  {g.name:28s} err-reduction "
                   f"{100*float(jnp.mean(r.error_reduction)):6.2f}%")
-        if w1_i:
-            W1 = jnp.stack(w1_i).reshape(
-                *g.stack_shape, *w1_i[0].shape) if g.stack_shape else w1_i[0]
-            node = new_params
-            for k in g.mask_path[:-1]:
-                node = node[k]
-            node[g.mask_path[-1]] = W1.astype(
-                node[g.mask_path[-1]].dtype)
+        if res.new_weights is not None:
+            _write_updated_weights(new_params, g, res.new_weights)
 
     mask_tree = sites_lib.build_mask_tree(api.cfg, site_masks, groups)
     return PruneReport(

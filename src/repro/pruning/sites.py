@@ -57,19 +57,50 @@ class GramStats:
 
 
 @dataclasses.dataclass
+class GramBatch:
+    """Stacked calibration statistics for ALL instances of a site group.
+
+    The group-batched engine consumes these directly — one (N, d_in, d_in)
+    Gram stack per jit call instead of N separate matrices.
+    """
+
+    G: jnp.ndarray        # (N, d_in, d_in) fp32
+    count: jnp.ndarray    # (N,) token counts
+    mean: jnp.ndarray     # (N, d_in)
+
+    @property
+    def ex2(self) -> jnp.ndarray:
+        diag = jnp.diagonal(self.G, axis1=-2, axis2=-1)
+        return diag / jnp.maximum(self.count, 1.0)[:, None]
+
+    @property
+    def variance(self) -> jnp.ndarray:
+        return jnp.maximum(self.ex2 - self.mean**2, 0.0)
+
+    def instance(self, i: int) -> GramStats:
+        return GramStats(G=self.G[i], count=self.count[i], mean=self.mean[i])
+
+
+@dataclasses.dataclass
 class SiteGroup:
     """All instances of one logical prunable site.
 
-    ``weights``: (N, d_out, d_in) — N = prod(stack dims); ``grams[i]``
-    matches ``weights[i]``. ``mask_path`` locates the stacked mask leaf in
-    the masks tree; ``unflatten`` restores the stack dims.
+    ``weights``: (N, d_out, d_in) — N = prod(stack dims); ``gram`` stacks
+    the matching calibration stats on the same leading N. ``mask_path``
+    locates the stacked mask leaf in the masks tree; ``stack_shape``
+    restores the stack dims.
     """
 
     name: str                       # e.g. "layers.attn.wq"
     weights: jnp.ndarray            # (N, d_out, d_in)
-    grams: list[GramStats]          # len N
+    gram: GramBatch                 # stacked stats, leading dim N
     mask_path: tuple[str, ...]      # where the (stack..., d_out, d_in) leaf lives
     stack_shape: tuple[int, ...]    # original leading dims
+
+    @property
+    def grams(self) -> list[GramStats]:
+        """Per-instance views (the reference refinement path)."""
+        return [self.gram.instance(i) for i in range(self.n_instances)]
 
     @property
     def n_instances(self) -> int:
@@ -92,20 +123,25 @@ def _flatten_stack(w: jnp.ndarray, n_stack: int) -> jnp.ndarray:
     return w.reshape(-1, *w.shape[n_stack:])
 
 
-def _gram_list(tap_entry: dict, n_stack: int) -> list[GramStats]:
-    """tap entry {g, s, n} with ``n_stack`` leading stack dims -> GramStats."""
-    g = _flatten_stack(tap_entry["g"], n_stack)
-    s = _flatten_stack(tap_entry["s"], max(n_stack - 0, 0)) if n_stack else tap_entry["s"][None]
-    n = jnp.reshape(tap_entry["n"], (-1,)) if n_stack else jnp.reshape(tap_entry["n"], (1,))
-    out = []
-    for i in range(g.shape[0]):
-        cnt = n[i] if n.shape[0] == g.shape[0] else jnp.sum(n)
-        out.append(GramStats(
-            G=g[i],
-            count=cnt,
-            mean=s[i] / jnp.maximum(cnt, 1.0),
-        ))
-    return out
+def _gram_batch(tap_entry: dict, n_stack: int) -> GramBatch:
+    """tap entry {g, s, n} with ``n_stack`` leading stack dims -> GramBatch.
+
+    ``g``/``s``/``n`` carry the same stack dims (scan outputs), so they
+    flatten symmetrically; a scalar ``n`` (shared blocks, already summed
+    over sites) broadcasts to every instance.
+    """
+    g = _flatten_stack(tap_entry["g"], n_stack)        # (N, d, d)
+    s = _flatten_stack(tap_entry["s"], n_stack)        # (N, d)
+    n = jnp.reshape(tap_entry["n"], (-1,))
+    N = g.shape[0]
+    assert s.shape[0] == N and n.shape[0] in (1, N), (
+        f"tap instance counts disagree: g={g.shape} s={s.shape} n={n.shape}")
+    count = jnp.broadcast_to(n, (N,)) if n.shape[0] == 1 else n
+    return GramBatch(
+        G=g,
+        count=count,
+        mean=s / jnp.maximum(count, 1.0)[:, None],
+    )
 
 
 def _sum_gram(tap_entry: dict) -> dict:
@@ -231,7 +267,7 @@ def enumerate_sites(cfg: ArchConfig, params: dict, taps: dict) -> list[SiteGroup
         groups.append(SiteGroup(
             name=name,
             weights=_flatten_stack(w, n_stack),
-            grams=_gram_list(tap, n_stack),
+            gram=_gram_batch(tap, n_stack),
             mask_path=ppath,
             stack_shape=stack_shape,
         ))

@@ -1,0 +1,51 @@
+"""Minimal stand-in for ``hypothesis`` when the package is absent.
+
+The tier-1 container doesn't ship hypothesis; rather than skip the
+property tests, this shim replays each ``@given`` body ``max_examples``
+times with deterministically seeded draws. Only the strategy surface the
+tests use is implemented (``integers``, ``sampled_from``).
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(**{k: s.sample(rng) for k, s in strats.items()})
+
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # mistakes the strategy parameters for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

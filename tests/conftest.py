@@ -5,6 +5,11 @@ import pytest
 import jax.numpy as jnp
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess lower+compile)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

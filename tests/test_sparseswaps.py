@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container without hypothesis
+    from _hyposhim import given, settings, strategies as st
 
 from conftest import make_problem
 from repro.core import masks as masks_lib
