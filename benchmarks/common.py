@@ -108,11 +108,8 @@ def evaluate(api, params, masks=None) -> dict:
                             seq=EVAL_SEQ)
 
 
-def parse_pattern(p: str) -> masks_lib.Pattern:
-    if ":" in p:
-        n, m = p.split(":")
-        return masks_lib.NM(int(n), int(m))
-    return masks_lib.PerRow(float(p))
+# the one shared parser (also reads recipe-rule strings like "0.6"/"2:4")
+parse_pattern = masks_lib.parse_pattern
 
 
 def save_table(name: str, data, *, fmt: str | None = None):

@@ -79,6 +79,29 @@ def run(arch: str = "llama31-8b", *, t_max: int = 20, sparsity: float = 0.6,
             print(f"  {name:14s} cold {times[0]:6.2f}s  "
                   f"warm {min(times[1:]):6.2f}s")
 
+    # staged API overhead: recipe -> plan -> execute vs the monolithic
+    # shim above (same engine path as group_batched, so the delta is pure
+    # plan/executor bookkeeping)
+    recipe = pruning.PruneRecipe.single(pat, t_max=t_max)
+    t0 = time.time()
+    plan = pruning.plan_pruning(api, params, recipe, swap_method="chunked")
+    plan.describe()
+    plan_s = time.time() - t0
+    times = []
+    for _ in range(max(repeats, 2)):
+        t0 = time.time()
+        plan = pruning.plan_pruning(api, params, recipe,
+                                    swap_method="chunked")
+        rep = pruning.PruneExecutor(api, params, plan, taps=taps).run()
+        jax.block_until_ready(jax.tree.leaves(rep.masks))
+        times.append(time.time() - t0)
+    rows.append({"variant": "plan_execute", "cold_s": times[0],
+                 "wall_s": min(times[1:]), "repeats_s": times,
+                 "plan_s": plan_s})
+    if verbose:
+        print(f"  {'plan_execute':14s} cold {times[0]:6.2f}s  "
+              f"warm {min(times[1:]):6.2f}s  (plan+describe {plan_s:.3f}s)")
+
     out = {"arch": arch, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
            "t_max": t_max, "sparsity": sparsity,
            "devices": len(jax.devices()), "rows": rows}

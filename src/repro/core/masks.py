@@ -58,6 +58,42 @@ class NM:
 Pattern = PerRow | NM
 
 
+def parse_pattern(spec: Pattern | str | float) -> Pattern:
+    """Parse a pattern spec: ``"0.6"``/``0.6`` -> PerRow, ``"2:4"`` -> NM.
+
+    The one parser behind CLI flags (``--sparsity``), benchmark tables and
+    JSON recipe rules; Pattern instances pass through unchanged.
+    """
+    if isinstance(spec, (PerRow, NM)):
+        return spec
+    if isinstance(spec, (int, float)):
+        return PerRow(float(spec))
+    s = spec.strip()
+    if ":" in s:
+        try:
+            n, m = (int(x) for x in s.split(":"))
+        except ValueError:
+            raise ValueError(f"bad N:M pattern spec {spec!r}") from None
+        if not (0 < n <= m):
+            raise ValueError(f"bad N:M pattern spec {spec!r}: need 0 < n <= m")
+        return NM(n, m)
+    try:
+        frac = float(s)
+    except ValueError:
+        raise ValueError(f"bad pattern spec {spec!r} "
+                         "(want a sparsity fraction or 'n:m')") from None
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"sparsity {frac} outside [0, 1]")
+    return PerRow(frac)
+
+
+def format_pattern(pattern: Pattern) -> str:
+    """Inverse of :func:`parse_pattern` (JSON recipe serialization)."""
+    if isinstance(pattern, NM):
+        return f"{pattern.n}:{pattern.m}"
+    return repr(pattern.sparsity)
+
+
 def topk_mask_per_row(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
     """Keep the ``keep`` highest-score entries per row. (R, d) -> float mask."""
     d = scores.shape[-1]

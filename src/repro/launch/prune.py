@@ -3,11 +3,18 @@
     PYTHONPATH=src python -m repro.launch.prune --arch llama31-8b --tiny \
         --sparsity 0.6 --warmstart wanda --method sparseswaps --t-max 50
 
-Loads (or trains) a model, calibrates on the calib split, refines masks
-with SparseSwaps (or a baseline), evaluates dense vs pruned, and writes
-masks + a JSON report. ``--from-ckpt`` prunes a trained checkpoint.
+Loads (or trains) a model, plans the run (``--plan-only`` prints the
+resolved per-site table — engine paths, weight/Gram bytes — and exits
+without spending a FLOP), calibrates, executes the plan group-by-group
+with resumable checkpoints, evaluates dense vs pruned, and writes masks +
+a JSON report. ``--recipe recipe.json`` swaps the single global rule for
+a declarative per-site recipe (mixed N:M + unstructured, skip-lists,
+per-rule t_max); ``--from-ckpt`` prunes a trained checkpoint.
+
 Calibration Gram accumulation checkpoints every ``--calib-ckpt-every``
-batches (layer-granular pruning restart per DESIGN §6).
+batches, and with ``--out-dir`` every completed site group's masks land
+under ``<out>/prune_ckpt`` — an interrupted refinement resumes at the
+group it died on (DESIGN §6).
 """
 from __future__ import annotations
 
@@ -24,13 +31,17 @@ from repro import ckpt, pruning
 from repro.core import masks as masks_lib
 from repro.train import steps as steps_lib
 
+# the one shared parser (core.masks); kept under its historical name
+parse_pattern = masks_lib.parse_pattern
 
-def parse_pattern(sparsity: str) -> masks_lib.Pattern:
-    """'0.6' -> PerRow(0.6); '2:4' -> NM(2, 4)."""
-    if ":" in sparsity:
-        n, m = sparsity.split(":")
-        return masks_lib.NM(int(n), int(m))
-    return masks_lib.PerRow(float(sparsity))
+
+def _build_recipe(pattern, *, recipe: str | None, warmstart: str,
+                  method: str, t_max: int) -> pruning.PruneRecipe:
+    if recipe is not None:
+        return pruning.PruneRecipe.from_json(Path(recipe).read_text())
+    return pruning.PruneRecipe.single(
+        parse_pattern(pattern), method=method, warmstart=warmstart,
+        t_max=t_max)
 
 
 def prune(arch: str, *, tiny: bool = True, pattern="0.6",
@@ -39,18 +50,28 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
           calib_batch: int = 4, from_ckpt: str | None = None,
           out_dir: str | None = None, seed: int = 0,
           calib_ckpt_every: int = 0, mesh: str | None = None,
+          recipe: str | None = None, plan_only: bool = False,
           verbose: bool = True) -> dict:
     """``mesh``: None (single device), "host" (all local devices), or
     "production" — sparseswaps refinement then runs row-sharded via
-    repro.dist (other methods have no distributed refiner and warn)."""
+    repro.dist (groups whose method has no distributed refiner are marked
+    "single-device" in the plan)."""
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
-    pat = parse_pattern(pattern) if isinstance(pattern, str) else pattern
+    rec = _build_recipe(pattern, recipe=recipe, warmstart=warmstart,
+                        method=method, t_max=t_max)
     mesh_obj = None
     if mesh:
         from repro.launch import mesh as mesh_lib
         mesh_obj = (mesh_lib.make_production_mesh() if mesh == "production"
                     else mesh_lib.make_host_mesh())
+
+    if plan_only:
+        # shapes only — no weights materialized, no FLOP spent
+        abstract = jax.eval_shape(lambda: api.init(jax.random.key(seed)))
+        plan = pruning.plan_pruning(api, abstract, rec, mesh=mesh_obj)
+        print(plan.describe())
+        return {"plan": plan}
 
     params = api.init(jax.random.key(seed))
     if from_ckpt:
@@ -61,6 +82,10 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
             from_ckpt, latest,
             jax.eval_shape(lambda: steps_lib.init_state(api, jax.random.key(seed))))
         params = state.params
+
+    plan = pruning.plan_pruning(api, params, rec, mesh=mesh_obj)
+    if verbose:
+        print(plan.describe())
 
     batches = list(pruning.calibration_batches(
         cfg, n_samples=n_calib, seq_len=calib_seq, batch_size=calib_batch,
@@ -76,9 +101,11 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
     taps = pruning.accumulate(api, params, batches,
                               checkpoint_every=calib_ckpt_every,
                               checkpoint_fn=ckpt_fn)
-    report = pruning.prune_model(api, params, None, pat, method=method,
-                                 warmstart=warmstart, t_max=t_max, taps=taps,
-                                 mesh=mesh_obj, progress=verbose)
+    executor = pruning.PruneExecutor(
+        api, params, plan, taps=taps,
+        ckpt_dir=Path(out_dir) / "prune_ckpt" if out_dir else None,
+        callback=pruning.PrintProgress() if verbose else None)
+    report = executor.run()
     dense_eval = pruning.evaluate(api, params, seed=seed)
     eval_params = report.updated_params if report.updated_params is not None \
         else params
@@ -95,13 +122,15 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
         out = Path(out_dir)
         out.mkdir(parents=True, exist_ok=True)
         ckpt.save(out / "masks", 0, report.masks)
+        (out / "recipe.json").write_text(rec.to_json())
         (out / "report.json").write_text(json.dumps({
-            "arch": arch, "method": method, "warmstart": warmstart,
-            "pattern": report.pattern,
+            "arch": arch, "method": report.method,
+            "warmstart": report.warmstart, "pattern": report.pattern,
             "mean_error_reduction": report.mean_error_reduction(),
             "dense": dense_eval, "pruned": sparse_eval,
             "wall_time_s": report.wall_time_s,
-            "sites": [{"name": s.name,
+            "sites": [{"name": s.name, "pattern": s.pattern,
+                       "method": s.method,
                        "err_red": [float(x) for x in s.error_reduction]}
                       for s in report.sites],
         }, indent=1))
@@ -124,11 +153,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None, choices=["host", "production"],
                     help="shard refinement over a device mesh (repro.dist)")
+    ap.add_argument("--recipe", default=None, metavar="recipe.json",
+                    help="per-site rules (overrides --sparsity/--method/...)")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the resolved plan table and exit")
     args = ap.parse_args(argv)
     prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
           warmstart=args.warmstart, method=args.method, t_max=args.t_max,
           n_calib=args.n_calib, from_ckpt=args.from_ckpt,
-          out_dir=args.out_dir, seed=args.seed, mesh=args.mesh)
+          out_dir=args.out_dir, seed=args.seed, mesh=args.mesh,
+          recipe=args.recipe, plan_only=args.plan_only)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,33 @@ from repro.launch import mesh as mesh_lib
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun" / "prune_step"
 
 
+def print_plan(arch: str = "llama31-8b", *,
+               gram_budget_bytes: int = 256 << 20) -> None:
+    """Render the full-model PrunePlan on the production mesh — shapes
+    only (eval_shape params), zero FLOPs.
+
+    The reduced Gram budget forces the down-proj (d_in=14336, 822 MB
+    fp32 Gram) onto the column-sharded-G path, so the table shows both
+    sharded regimes the variants below lower.
+    """
+    import repro.configs as configs
+    import repro.models as models
+    from repro import pruning
+
+    cfg = configs.get(arch)
+    api = models.build(cfg)
+    abstract = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4)),),
+        pattern=masks_lib.PerRow(0.6))
+    plan = pruning.plan_pruning(api, abstract, recipe,
+                                mesh=mesh_lib.make_production_mesh(),
+                                gram_budget_bytes=gram_budget_bytes)
+    print(f"== {arch} pruning plan (production mesh, "
+          f"G budget {gram_budget_bytes >> 20} MiB) ==")
+    print(plan.describe())
+
+
 def _refine_fn(mesh, pattern, *, t_max: int, variant: str, chunk: int = 512,
                unroll: bool = False):
     """(W, G, M0) -> (M, l0, l1); scan unrolled for the cost probes."""
@@ -159,6 +186,7 @@ def lower_variant(variant: str, *, d_out=14336, d_in=4096, t_max=100,
 
 def main(variants=("dense", "chunked", "gshard")):
     RESULTS.mkdir(parents=True, exist_ok=True)
+    print_plan()
     rows = []
     for v in variants:
         try:

@@ -1,16 +1,28 @@
-"""Pruning pipeline: calibrate -> warmstart -> refine (SparseSwaps) -> apply."""
+"""Pruning pipeline: recipe -> plan -> execute (calibrate/refine/apply).
+
+``prune_model`` remains the one-call entry point (a single-rule recipe);
+``PruneRecipe``/``plan_pruning``/``PruneExecutor`` expose the staged API
+with per-site rules, dry-run cost tables and group-granular resume.
+"""
 from .calibrate import accumulate, calibration_batches, make_tap_step
 from .engine import (GroupResult, RefineContext, refine_group,
                      refine_group_reference, register)
 from .evaluate import evaluate, perplexity, top1_accuracy, val_batches
+from .executor import (PruneCallback, PruneExecutor, PrintProgress)
 from .pipeline import PruneReport, SiteReport, apply, prune_model
-from .sites import (GramBatch, GramStats, SiteGroup, build_mask_tree,
-                    enumerate_sites, prunable_param_count)
+from .plan import PlannedGroup, PrunePlan, plan_pruning
+from .recipe import PruneRecipe, ResolvedRule, SiteRule
+from .sites import (GramBatch, GramStats, SiteGroup, SiteSpec,
+                    build_mask_tree, enumerate_sites, prunable_param_count,
+                    site_specs)
 
 __all__ = [
-    "GramBatch", "GramStats", "GroupResult", "PruneReport", "RefineContext",
-    "SiteGroup", "SiteReport", "accumulate", "apply", "build_mask_tree",
+    "GramBatch", "GramStats", "GroupResult", "PlannedGroup", "PrintProgress",
+    "PruneCallback", "PruneExecutor", "PrunePlan", "PruneRecipe",
+    "PruneReport", "RefineContext", "ResolvedRule", "SiteGroup", "SiteReport",
+    "SiteRule", "SiteSpec", "accumulate", "apply", "build_mask_tree",
     "calibration_batches", "enumerate_sites", "evaluate", "make_tap_step",
-    "perplexity", "prunable_param_count", "prune_model", "refine_group",
-    "refine_group_reference", "register", "top1_accuracy", "val_batches",
+    "perplexity", "plan_pruning", "prunable_param_count", "prune_model",
+    "refine_group", "refine_group_reference", "register", "site_specs",
+    "top1_accuracy", "val_batches",
 ]

@@ -64,6 +64,16 @@ class RefineContext:
     mesh: Mesh | None = None
     gram_budget_bytes: int = DEFAULT_GRAM_BUDGET
 
+    def with_overrides(self, **overrides) -> "RefineContext":
+        """Per-group context: replace only the knobs a recipe rule sets.
+
+        ``None`` values mean "inherit" — a rule that only pins ``t_max``
+        leaves warmstart/eps/... at the run-wide defaults, so the executor
+        builds one context per planned group from one base context.
+        """
+        kept = {k: v for k, v in overrides.items() if v is not None}
+        return dataclasses.replace(self, **kept) if kept else self
+
 
 @dataclasses.dataclass
 class GroupResult:

@@ -1,104 +1,53 @@
-"""The end-to-end pruning pipeline: calibrate -> warmstart -> refine -> apply.
+"""The monolithic pruning entry point, now a shim over recipe/plan/execute.
 
-This is the paper's workflow as a first-class framework feature:
+The pipeline is three first-class stages (see ``recipe``, ``plan``,
+``executor``)::
+
+    recipe = PruneRecipe(rules=(SiteRule("*.attn.*", pattern=masks.NM(2, 4)),
+                                SiteRule("*", pattern=masks.PerRow(0.6))))
+    plan   = plan_pruning(api, params, recipe, mesh=mesh)
+    print(plan.describe())                  # dry run: costs + engine paths
+    report = PruneExecutor(api, params, plan, taps=taps,
+                           ckpt_dir="out/prune_ckpt").run()
+
+``prune_model`` keeps the original one-call signature as a single-rule
+recipe — tested bit-identical against the staged path — so every existing
+call site (benchmarks, launchers, tests) works unchanged:
 
     report = prune_model(api, params, batches, pattern,
                          warmstart="wanda", method="sparseswaps", t_max=100)
     masks  = report.masks                 # pytree for loss(..., masks=masks)
     params = apply(params, masks)         # hard-zeroed weights
 
-Methods (the ``engine`` registry):
-    "none"        warmstart mask only (= Wanda / RIA / magnitude baselines)
-    "sparseswaps" the paper's 1-swap refinement (monotone, exact)
-    "dsnot"       DSnoT baseline (surrogate-driven swaps)
-    "sparsegpt"   SparseGPT baseline (mask + OBS weight update)
-
-Each SiteGroup refines as ONE group-batched jit call over its stacked
-(N, d_out, d_in) weights (``engine.refine_group``); pass ``mesh=`` to route
-sparseswaps refinement through the sharded refiners in
-``pruning.distributed`` (rows over every mesh axis, with the column-
-sharded-G fallback for Grams past the replication budget). The original
-per-instance Python loop survives as ``engine_mode="reference"``, tested
-bit-identical against the batched default.
-
-All per-layer losses (before/after) are recorded per site instance — the
-benchmarks for paper Fig. 1 / Tables 3-4 read them directly.
+Methods (the ``engine`` registry): "none" (warmstart only), "sparseswaps"
+(the paper's 1-swap refinement), "dsnot", "sparsegpt". ``mesh=`` routes
+sparseswaps through the sharded refiners in ``pruning.distributed``;
+``engine_mode="reference"`` keeps the per-instance loop alive for
+verification. All per-layer losses (before/after) are recorded per site
+instance — the benchmarks for paper Fig. 1 / Tables 3-4 read them
+directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-import warnings
 from typing import Iterable
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import masks as masks_lib
 from repro.models import ModelApi
 from repro.optim.adamw import apply_masks as apply
 
-from . import calibrate as calibrate_lib
 from . import engine as engine_lib
-from . import sites as sites_lib
+from .executor import (PruneCallback, PruneExecutor, PruneReport,
+                       PrintProgress, SiteReport)
+from .plan import plan_pruning
+from .recipe import PruneRecipe
 
 # reference-path alias, kept where it historically lived
 _refine_instance = engine_lib.refine_instance
 
-
-@dataclasses.dataclass
-class SiteReport:
-    name: str                    # site-group name
-    labels: list[str]            # per-instance labels
-    loss_init: jnp.ndarray       # (N,) summed row loss per instance, warmstart
-    loss_final: jnp.ndarray      # (N,) after refinement
-    swaps: jnp.ndarray           # (N,) accepted swaps (sparseswaps only)
-
-    @property
-    def error_reduction(self) -> jnp.ndarray:
-        return (self.loss_init - self.loss_final) / jnp.maximum(
-            self.loss_init, 1e-30)
-
-
-@dataclasses.dataclass
-class PruneReport:
-    masks: dict                          # pytree for loss(..., masks=...)
-    sites: list[SiteReport]
-    method: str
-    warmstart: str
-    pattern: str
-    wall_time_s: float
-    updated_params: dict | None = None   # sparsegpt only
-
-    def mean_error_reduction(self) -> float:
-        """Mean relative per-layer error reduction (paper Tables 3/4)."""
-        vals = jnp.concatenate([s.error_reduction for s in self.sites])
-        return float(jnp.mean(vals))
-
-    def total_loss(self, which: str = "final") -> float:
-        key = {"init": "loss_init", "final": "loss_final"}[which]
-        return float(sum(jnp.sum(getattr(s, key)) for s in self.sites))
-
-    def summary(self) -> str:
-        lines = [f"method={self.method} warmstart={self.warmstart} "
-                 f"pattern={self.pattern} wall={self.wall_time_s:.1f}s",
-                 f"mean error reduction: {100*self.mean_error_reduction():.2f}%"]
-        for s in self.sites:
-            red = 100 * float(jnp.mean(s.error_reduction))
-            lines.append(f"  {s.name:28s} n={len(s.labels):3d} "
-                         f"err-reduction {red:6.2f}%")
-        return "\n".join(lines)
-
-
-def _write_updated_weights(new_params: dict, g: sites_lib.SiteGroup,
-                           W1: jnp.ndarray):
-    """Insert a group's updated weight stack at its param path."""
-    W1 = W1.reshape(*g.stack_shape, *W1.shape[1:]) if g.stack_shape else W1[0]
-    node = new_params
-    for k in g.mask_path[:-1]:
-        node = node[k]
-    node[g.mask_path[-1]] = W1.astype(node[g.mask_path[-1]].dtype)
+__all__ = ["PruneCallback", "PruneExecutor", "PruneReport", "PrintProgress",
+           "SiteReport", "apply", "prune_model"]
 
 
 def prune_model(
@@ -118,57 +67,22 @@ def prune_model(
     mesh: Mesh | None = None,
     gram_budget_bytes: int = engine_lib.DEFAULT_GRAM_BUDGET,
     engine_mode: str = "batched",
+    ckpt_dir=None,
+    callback: PruneCallback | None = None,
 ) -> PruneReport:
-    """Full pipeline. Pass precomputed ``taps`` to skip calibration.
+    """Full pipeline with one global rule. Pass ``taps`` to skip calibration.
 
-    ``mesh`` routes sparseswaps refinement through the sharded refiners;
-    ``engine_mode`` selects "batched" (default, one jit per site group) or
-    "reference" (the per-instance loop, for verification).
+    Equivalent to ``PruneRecipe.single(pattern, ...)`` -> ``plan_pruning``
+    -> ``PruneExecutor.run`` (bit-identical masks, under test).
+    ``ckpt_dir`` opts into the executor's group-granular resume.
     """
-    t_start = time.time()
-    if mesh is not None and method != "sparseswaps":
-        warnings.warn(
-            f"mesh= is only honored by method='sparseswaps' (no distributed "
-            f"refiner for {method!r}); refining single-device")
-    if taps is None:
-        taps = calibrate_lib.accumulate(api, params, calib_batches)
-    groups = sites_lib.enumerate_sites(api.cfg, params, taps)
-
-    ctx = engine_lib.RefineContext(
-        warmstart=warmstart, t_max=t_max, eps=eps, swap_method=swap_method,
-        chunk=512, row_block=row_block, mesh=mesh,
-        gram_budget_bytes=gram_budget_bytes)
-    run = {"batched": engine_lib.refine_group,
-           "reference": engine_lib.refine_group_reference}[engine_mode]
-
-    site_masks: dict[str, jnp.ndarray] = {}
-    reports: list[SiteReport] = []
-    new_params = None
-    if method == "sparsegpt":
-        new_params = jax.tree.map(lambda x: x, params)  # shallow copy tree
-
-    for g in groups:
-        res = run(method, g, pattern, ctx)
-        site_masks[g.name] = res.masks
-        reports.append(SiteReport(
-            name=g.name, labels=g.labels(),
-            loss_init=jnp.sum(res.loss_init, axis=1),
-            loss_final=jnp.sum(res.loss_final, axis=1),
-            swaps=jnp.sum(res.swaps, axis=1)))
-        if progress:
-            r = reports[-1]
-            print(f"  {g.name:28s} err-reduction "
-                  f"{100*float(jnp.mean(r.error_reduction)):6.2f}%")
-        if res.new_weights is not None:
-            _write_updated_weights(new_params, g, res.new_weights)
-
-    mask_tree = sites_lib.build_mask_tree(api.cfg, site_masks, groups)
-    return PruneReport(
-        masks=mask_tree,
-        sites=reports,
-        method=method,
-        warmstart=warmstart,
-        pattern=pattern.describe(),
-        wall_time_s=time.time() - t_start,
-        updated_params=new_params,
-    )
+    recipe = PruneRecipe.single(pattern, method=method, warmstart=warmstart,
+                                t_max=t_max, eps=eps)
+    plan = plan_pruning(api, params, recipe, mesh=mesh,
+                        gram_budget_bytes=gram_budget_bytes,
+                        swap_method=swap_method, row_block=row_block)
+    if callback is None and progress:
+        callback = PrintProgress()
+    ex = PruneExecutor(api, params, plan, taps=taps, ckpt_dir=ckpt_dir,
+                       callback=callback, engine_mode=engine_mode)
+    return ex.run(calib_batches)

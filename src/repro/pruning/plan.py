@@ -1,0 +1,174 @@
+"""Pruning plans: resolve a recipe against a model before spending FLOPs.
+
+``plan_pruning(api, params, recipe, mesh=...)`` maps every enumerated
+``SiteSpec`` through the recipe's first-match resolution and precomputes,
+per group, what executing it will cost and which engine path it will take:
+
+* ``batched``      — one vmapped jit over the stacked group (no mesh);
+* ``rows-sharded`` — ``distributed.refine_rows_sharded`` (G replicated);
+* ``gram-sharded`` — column-sharded G past ``gram_budget_bytes``;
+* ``single-device``— mesh requested but the method has no distributed
+                     refiner (surfaced HERE, in the dry run, instead of a
+                     mid-run warning after an hour of calibration);
+* ``skip``         — the rule leaves the site dense.
+
+``PrunePlan.describe()`` renders the whole thing as a table — the dry-run
+view ``launch/prune.py --plan-only`` and ``launch/prune_dryrun.py`` print.
+``params`` may be a ``jax.eval_shape`` tree: planning reads shapes only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from jax.sharding import Mesh
+
+from repro.core import masks as masks_lib
+
+from . import engine as engine_lib
+from . import recipe as recipe_lib
+from . import sites as sites_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedGroup:
+    """One site group with its resolved rule and cost estimate."""
+
+    spec: sites_lib.SiteSpec
+    rule: recipe_lib.ResolvedRule
+    engine_path: str             # batched | rows-sharded | gram-sharded |
+                                 # single-device | skip
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def skip(self) -> bool:
+        return self.rule.skip
+
+    @property
+    def weight_bytes(self) -> int:
+        return 0 if self.skip else self.spec.weight_bytes
+
+    @property
+    def gram_bytes(self) -> int:
+        return 0 if self.skip else self.spec.gram_bytes
+
+
+def _engine_path(spec: sites_lib.SiteSpec, rule: recipe_lib.ResolvedRule,
+                 mesh: Mesh | None, gram_budget_bytes: int) -> str:
+    if rule.skip:
+        return "skip"
+    if mesh is None:
+        return "batched"
+    if rule.method != "sparseswaps":
+        return "single-device"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # execution owns the warning
+        regime = engine_lib._sharded_regime(
+            rule.pattern, spec.d_in, mesh, gram_budget_bytes)
+    return {"rows": "rows-sharded", "gram": "gram-sharded"}[regime]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunePlan:
+    """The resolved, costed execution order ``PruneExecutor`` runs."""
+
+    groups: tuple[PlannedGroup, ...]
+    recipe: recipe_lib.PruneRecipe
+    mesh: Mesh | None = None
+    gram_budget_bytes: int = engine_lib.DEFAULT_GRAM_BUDGET
+    swap_method: str = "auto"
+    chunk: int = 512
+    row_block: int | None = None
+
+    @property
+    def active_groups(self) -> tuple[PlannedGroup, ...]:
+        return tuple(g for g in self.groups if not g.skip)
+
+    def total_weight_bytes(self) -> int:
+        return sum(g.weight_bytes for g in self.groups)
+
+    def total_gram_bytes(self) -> int:
+        return sum(g.gram_bytes for g in self.groups)
+
+    def single_device_groups(self) -> list[str]:
+        """Groups that asked for the mesh but will refine single-device."""
+        return [g.name for g in self.groups
+                if g.engine_path == "single-device"]
+
+    def base_context(self) -> engine_lib.RefineContext:
+        """Run-wide knobs; the executor layers rule overrides per group."""
+        return engine_lib.RefineContext(
+            warmstart=self.recipe.warmstart, t_max=self.recipe.t_max,
+            eps=self.recipe.eps, swap_method=self.swap_method,
+            chunk=self.chunk, row_block=self.row_block, mesh=self.mesh,
+            gram_budget_bytes=self.gram_budget_bytes)
+
+    def group_context(self, g: PlannedGroup) -> engine_lib.RefineContext:
+        return self.base_context().with_overrides(
+            warmstart=g.rule.warmstart, t_max=g.rule.t_max, eps=g.rule.eps)
+
+    def describe(self) -> str:
+        """The dry-run table: every group, its treatment, its cost."""
+        hdr = (f"{'site':30s} {'n':>4s} {'d_out x d_in':>14s} "
+               f"{'pattern':>8s} {'method':>11s} {'warm':>9s} {'t_max':>5s} "
+               f"{'path':>13s} {'W MiB':>8s} {'G MiB':>8s}")
+        lines = [hdr, "-" * len(hdr)]
+        for g in self.groups:
+            s, r = g.spec, g.rule
+            if g.skip:
+                lines.append(
+                    f"{s.name:30s} {s.n_instances:4d} "
+                    f"{f'{s.d_out} x {s.d_in}':>14s} {'-':>8s} {'skip':>11s} "
+                    f"{'-':>9s} {'-':>5s} {'skip':>13s} {'-':>8s} {'-':>8s}")
+                continue
+            lines.append(
+                f"{s.name:30s} {s.n_instances:4d} "
+                f"{f'{s.d_out} x {s.d_in}':>14s} {r.pattern_str:>8s} "
+                f"{r.method:>11s} {r.warmstart:>9s} {r.t_max:5d} "
+                f"{g.engine_path:>13s} {g.weight_bytes/2**20:8.1f} "
+                f"{g.gram_bytes/2**20:8.1f}")
+        lines.append("-" * len(hdr))
+        n_active = len(self.active_groups)
+        mesh_s = ("none" if self.mesh is None else
+                  f"{'x'.join(str(d) for d in self.mesh.devices.shape)} "
+                  f"({self.mesh.size} devices)")
+        lines.append(
+            f"{n_active}/{len(self.groups)} groups to refine | mesh: {mesh_s}"
+            f" | totals: W {self.total_weight_bytes()/2**20:.1f} MiB, "
+            f"G {self.total_gram_bytes()/2**20:.1f} MiB "
+            f"(budget {self.gram_budget_bytes/2**20:.0f} MiB/device)")
+        single = self.single_device_groups()
+        if single:
+            lines.append(
+                f"NOTE: {len(single)} group(s) refine single-device despite "
+                f"mesh= (no distributed refiner for their method): "
+                + ", ".join(single))
+        return "\n".join(lines)
+
+
+def plan_pruning(api, params, recipe: recipe_lib.PruneRecipe, *,
+                 mesh: Mesh | None = None,
+                 gram_budget_bytes: int = engine_lib.DEFAULT_GRAM_BUDGET,
+                 swap_method: str = "auto", chunk: int = 512,
+                 row_block: int | None = None) -> PrunePlan:
+    """Resolve ``recipe`` against the model's sites into a ``PrunePlan``.
+
+    Pure shape arithmetic: ``params`` may be the ``jax.eval_shape`` tree of
+    ``api.init`` and no calibration is required — the plan (and its
+    ``describe()`` table) exists before any FLOP is spent.
+    """
+    specs = sites_lib.site_specs(api.cfg, params)
+    recipe.validate(specs)
+    groups = []
+    for spec in specs:
+        rule = recipe.resolve(spec.name, tuple(spec.labels()))
+        groups.append(PlannedGroup(
+            spec=spec, rule=rule,
+            engine_path=_engine_path(spec, rule, mesh, gram_budget_bytes)))
+    return PrunePlan(groups=tuple(groups), recipe=recipe, mesh=mesh,
+                     gram_budget_bytes=gram_budget_bytes,
+                     swap_method=swap_method, chunk=chunk,
+                     row_block=row_block)

@@ -108,12 +108,54 @@ class SiteGroup:
 
     def labels(self) -> list[str]:
         """Per-instance labels like 'layers.attn.wq[3]'."""
-        if not self.stack_shape:
-            return [self.name]
-        idx = [()]
-        for d in self.stack_shape:
-            idx = [(*i, j) for i in idx for j in range(d)]
-        return [f"{self.name}{list(i)}" for i in idx]
+        return _instance_labels(self.name, self.stack_shape)
+
+    @property
+    def spec(self) -> "SiteSpec":
+        """Shape-only view of this group (what the planner consumes)."""
+        return SiteSpec(name=self.name,
+                        n_instances=self.n_instances,
+                        d_out=int(self.weights.shape[1]),
+                        d_in=int(self.weights.shape[2]),
+                        stack_shape=self.stack_shape)
+
+
+def _instance_labels(name: str, stack_shape: tuple[int, ...]) -> list[str]:
+    if not stack_shape:
+        return [name]
+    idx = [()]
+    for d in stack_shape:
+        idx = [(*i, j) for i in idx for j in range(d)]
+    return [f"{name}{list(i)}" for i in idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """Shape-only description of one SiteGroup — no weights, no Grams.
+
+    ``site_specs`` builds these from nothing but the family table and the
+    param (or ShapeDtypeStruct) tree, so recipe resolution and plan cost
+    estimates run before calibration spends a single FLOP.
+    """
+
+    name: str
+    n_instances: int
+    d_out: int
+    d_in: int
+    stack_shape: tuple[int, ...]
+
+    def labels(self) -> list[str]:
+        return _instance_labels(self.name, self.stack_shape)
+
+    @property
+    def weight_bytes(self) -> int:
+        """fp32 bytes of the stacked weights as the refiners see them."""
+        return 4 * self.n_instances * self.d_out * self.d_in
+
+    @property
+    def gram_bytes(self) -> int:
+        """fp32 bytes of the stacked (N, d_in, d_in) calibration Grams."""
+        return 4 * self.n_instances * self.d_in * self.d_in
 
 
 def _flatten_stack(w: jnp.ndarray, n_stack: int) -> jnp.ndarray:
@@ -252,10 +294,18 @@ def _table(cfg: ArchConfig):
 # public API
 # ---------------------------------------------------------------------------
 
-def enumerate_sites(cfg: ArchConfig, params: dict, taps: dict) -> list[SiteGroup]:
-    """Pair every prunable weight stack with its calibration Gram stats."""
+def enumerate_sites(cfg: ArchConfig, params: dict, taps: dict, *,
+                    only: set | None = None) -> list[SiteGroup]:
+    """Pair every prunable weight stack with its calibration Gram stats.
+
+    ``only`` restricts to the named site groups — skip-listed sites never
+    pay the weight/Gram stacking (a skipped granite-34b down-proj is a
+    2.4 GB fp32 Gram that would otherwise be materialized for nothing).
+    """
     groups = []
     for name, ppath, tpath, stack in _table(cfg):
+        if only is not None and name not in only:
+            continue
         w = _get(params, ppath)
         tap = _get(taps, tpath)
         if stack == "sum":                    # shared block: sum over sites
@@ -272,6 +322,28 @@ def enumerate_sites(cfg: ArchConfig, params: dict, taps: dict) -> list[SiteGroup
             stack_shape=stack_shape,
         ))
     return groups
+
+
+def site_specs(cfg: ArchConfig, params: dict) -> list[SiteSpec]:
+    """Enumerate prunable sites from shapes alone (no taps, no FLOPs).
+
+    ``params`` may be real arrays or the ``jax.eval_shape`` tree of
+    ``api.init`` — only ``.shape`` is read, so ``--plan-only`` launches
+    never materialize a weight.
+    """
+    specs = []
+    for name, ppath, _, stack in _table(cfg):
+        shape = tuple(_get(params, ppath).shape)
+        n_stack = 0 if stack == "sum" else stack
+        stack_shape = shape[:n_stack]
+        n = 1
+        for d in stack_shape:
+            n *= int(d)
+        specs.append(SiteSpec(
+            name=name, n_instances=n,
+            d_out=int(shape[n_stack]), d_in=int(shape[n_stack + 1]),
+            stack_shape=tuple(int(d) for d in stack_shape)))
+    return specs
 
 
 def build_mask_tree(cfg: ArchConfig, site_masks: dict[str, jnp.ndarray],

@@ -1,0 +1,268 @@
+"""PruneExecutor: shim bit-identity, mixed recipes end-to-end,
+group-granular resume, fail-fast mask validation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks as masks_lib
+
+
+@pytest.fixture(scope="module")
+def llama_setup():
+    cfg = configs.get_tiny("llama31-8b")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    batches = list(pruning.calibration_batches(cfg, n_samples=4, seq_len=24,
+                                               batch_size=2))
+    taps = pruning.accumulate(api, params, batches)
+    return cfg, api, params, taps
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def _assert_tree_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for (ka, va), (kb, vb) in zip(la, lb):
+        assert ka == kb
+        assert np.array_equal(np.asarray(va), np.asarray(vb)), ka
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["none", "sparseswaps", "sparsegpt"])
+def test_prune_model_shim_bit_identical(llama_setup, method):
+    """The legacy one-call API == single-rule recipe -> plan -> execute."""
+    cfg, api, params, taps = llama_setup
+    pat = masks_lib.PerRow(0.6)
+    old = pruning.prune_model(api, params, None, pat, method=method,
+                              warmstart="wanda", t_max=6, taps=taps)
+    recipe = pruning.PruneRecipe.single(pat, method=method,
+                                        warmstart="wanda", t_max=6)
+    plan = pruning.plan_pruning(api, params, recipe)
+    new = pruning.PruneExecutor(api, params, plan, taps=taps).run()
+    _assert_tree_equal(old.masks, new.masks)
+    assert old.pattern == new.pattern == masks_lib.format_pattern(pat)
+    assert old.method == new.method == method
+    for so, sn in zip(old.sites, new.sites):
+        assert so.name == sn.name
+        np.testing.assert_array_equal(np.asarray(so.loss_final),
+                                      np.asarray(sn.loss_final))
+    if method == "sparsegpt":
+        _assert_tree_equal(old.updated_params, new.updated_params)
+
+
+# ---------------------------------------------------------------------------
+# mixed recipes end-to-end
+# ---------------------------------------------------------------------------
+
+def test_mixed_recipe_per_site_patterns(llama_setup):
+    """2:4 attention + 0.6 unstructured MLP + a skip-list, one run."""
+    cfg, api, params, taps = llama_setup
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4)),
+               pruning.SiteRule("*.mlp.w_down", skip=True),
+               pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6))),
+        t_max=5)
+    plan = pruning.plan_pruning(api, params, recipe)
+    rep = pruning.PruneExecutor(api, params, plan, taps=taps).run()
+    # every group's masks satisfy its OWN resolved pattern
+    for s in rep.sites:
+        pat = masks_lib.parse_pattern(s.pattern)
+        want = "2:4" if ".attn." in s.name else "0.6"
+        assert s.pattern == want, s.name
+    for g in pruning.enumerate_sites(cfg, params, taps):
+        if g.name == "layers.mlp.w_down":
+            continue
+        leaf = rep.masks
+        for k in g.mask_path:
+            leaf = leaf[k]
+        pat = (masks_lib.NM(2, 4) if ".attn." in g.name
+               else masks_lib.PerRow(0.6))
+        flat = jnp.asarray(np.asarray(leaf).reshape(-1, leaf.shape[-1]))
+        assert masks_lib.validate_mask(flat, pat), g.name
+    # the skipped site has no mask leaf (stays dense) but the model runs
+    assert "w_down" not in rep.masks["layers"]["mlp"]
+    assert rep.pattern == "mixed"
+    assert {s.name for s in rep.sites} == {
+        "layers.attn.wq", "layers.attn.wk", "layers.attn.wv",
+        "layers.attn.wo", "layers.mlp.w_gate", "layers.mlp.w_up"}
+    batch = models.make_batch(cfg, 2, 16, jax.random.key(2))
+    loss, _ = api.loss(params, batch, masks=rep.masks)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_mixed_recipe_moe():
+    """Per-expert MoE groups take their own rule (N:M experts, dense attn
+    via skip) and the mask tree still lands on the stacked expert dims."""
+    cfg = configs.get_tiny("mixtral-8x7b")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    batches = list(pruning.calibration_batches(cfg, n_samples=4, seq_len=24,
+                                               batch_size=2))
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("layers.moe.*", pattern=masks_lib.NM(2, 4)),
+               pruning.SiteRule("layers.attn.*",
+                                pattern=masks_lib.PerRow(0.5))),
+        t_max=4)
+    plan = pruning.plan_pruning(api, params, recipe)
+    rep = pruning.PruneExecutor(api, params, plan).run(batches)
+    moe_up = rep.masks["layers"]["moe"]["w_up"]
+    assert moe_up.shape == params["layers"]["moe"]["w_up"].shape
+    flat = jnp.asarray(np.asarray(moe_up).reshape(-1, moe_up.shape[-1]))
+    assert masks_lib.validate_mask(flat, masks_lib.NM(2, 4))
+    batch = models.make_batch(cfg, 2, 16, jax.random.key(3))
+    loss, _ = api.loss(params, batch, masks=rep.masks)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_all_skip_recipe_report(llama_setup):
+    """Skipping every site is legal: empty report, dense model still runs."""
+    cfg, api, params, taps = llama_setup
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*", skip=True),))
+    plan = pruning.plan_pruning(api, params, recipe)
+    rep = pruning.PruneExecutor(api, params, plan, taps=taps).run()
+    assert rep.sites == [] and rep.mean_error_reduction() == 0.0
+    assert "mean error reduction" in rep.summary()
+    batch = models.make_batch(cfg, 2, 16, jax.random.key(4))
+    loss, _ = api.loss(params, batch, masks=rep.masks)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_single_device_warning_fires_once(llama_setup):
+    cfg, api, params, taps = llama_setup
+    with pytest.warns(UserWarning, match="single-device") as rec:
+        pruning.prune_model(
+            api, params, None, masks_lib.PerRow(0.5), method="dsnot",
+            t_max=2, taps=taps,
+            mesh=jax.sharding.Mesh(np.array(jax.devices()[:1]), ("d",)))
+    ours = [w for w in rec if "single-device" in str(w.message)]
+    assert len(ours) == 1
+
+
+# ---------------------------------------------------------------------------
+# resume
+# ---------------------------------------------------------------------------
+
+class _KillAfter(pruning.PruneCallback):
+    def __init__(self, k):
+        self.k, self.done = k, 0
+
+    def on_group_done(self, planned, report, *, restored):
+        self.done += 1
+        if self.done >= self.k:
+            raise KeyboardInterrupt
+
+
+class _CountRestored(pruning.PruneCallback):
+    def __init__(self):
+        self.restored, self.computed = [], []
+
+    def on_group_done(self, planned, report, *, restored):
+        (self.restored if restored else self.computed).append(planned.name)
+
+
+def test_kill_after_k_groups_resumes_bit_identical(llama_setup, tmp_path):
+    """Interrupt after k site groups; rerun resumes from checkpoints and
+    reproduces the uninterrupted masks and reports exactly."""
+    cfg, api, params, taps = llama_setup
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4)),),
+        pattern=masks_lib.PerRow(0.6), t_max=6)
+    plan = pruning.plan_pruning(api, params, recipe)
+    clean = pruning.PruneExecutor(api, params, plan, taps=taps).run()
+
+    k = 3
+    with pytest.raises(KeyboardInterrupt):
+        pruning.PruneExecutor(api, params, plan, taps=taps,
+                              ckpt_dir=tmp_path,
+                              callback=_KillAfter(k)).run()
+    counter = _CountRestored()
+    resumed = pruning.PruneExecutor(api, params, plan, taps=taps,
+                                    ckpt_dir=tmp_path,
+                                    callback=counter).run()
+    assert len(counter.restored) == k
+    assert len(counter.computed) == len(plan.active_groups) - k
+    _assert_tree_equal(clean.masks, resumed.masks)
+    for sc, sr in zip(clean.sites, resumed.sites):
+        assert sc.name == sr.name
+        assert sc.pattern == sr.pattern and sc.method == sr.method
+        for f in ("loss_init", "loss_final", "swaps"):
+            np.testing.assert_array_equal(np.asarray(getattr(sc, f)),
+                                          np.asarray(getattr(sr, f)))
+
+
+def test_resume_rejects_different_weights(llama_setup, tmp_path):
+    """Checkpoints from a different seed/source model are recomputed, not
+    silently restored (content hash of weights+Gram in the tag)."""
+    cfg, api, params, taps = llama_setup
+    recipe = pruning.PruneRecipe.single(masks_lib.PerRow(0.5),
+                                        method="none")
+    plan = pruning.plan_pruning(api, params, recipe)
+    pruning.PruneExecutor(api, params, plan, taps=taps,
+                          ckpt_dir=tmp_path).run()
+    params2 = jax.tree.map(lambda x: x * 1.01, params)
+    counter = _CountRestored()
+    pruning.PruneExecutor(api, params2,
+                          pruning.plan_pruning(api, params2, recipe),
+                          taps=taps, ckpt_dir=tmp_path,
+                          callback=counter).run()
+    assert not counter.restored          # same shapes, different bytes
+
+
+def test_resume_rejects_stale_rule_checkpoints(llama_setup, tmp_path):
+    """A checkpoint written under a different resolved rule is recomputed,
+    not trusted."""
+    cfg, api, params, taps = llama_setup
+    r1 = pruning.PruneRecipe.single(masks_lib.PerRow(0.6), t_max=4)
+    pruning.PruneExecutor(api, params,
+                          pruning.plan_pruning(api, params, r1),
+                          taps=taps, ckpt_dir=tmp_path).run()
+    r2 = pruning.PruneRecipe.single(masks_lib.PerRow(0.6), t_max=5)
+    counter = _CountRestored()
+    pruning.PruneExecutor(api, params,
+                          pruning.plan_pruning(api, params, r2),
+                          taps=taps, ckpt_dir=tmp_path,
+                          callback=counter).run()
+    assert not counter.restored          # every group recomputed
+
+
+# ---------------------------------------------------------------------------
+# fail-fast validation
+# ---------------------------------------------------------------------------
+
+def test_bad_refiner_fails_at_offending_group(llama_setup, tmp_path):
+    """A refiner violating its resolved pattern raises before anything is
+    checkpointed."""
+    cfg, api, params, taps = llama_setup
+
+    @pruning.register("keep_all")
+    def _keep_all(W, gram, pattern, ctx):  # noqa: ANN001
+        l = jnp.zeros(W.shape[:2], jnp.float32)
+        return pruning.GroupResult(
+            masks=jnp.ones(W.shape, jnp.float32), loss_init=l,
+            loss_final=l, swaps=jnp.zeros(W.shape[:2], jnp.int32))
+
+    try:
+        recipe = pruning.PruneRecipe(
+            rules=(pruning.SiteRule("*.mlp.w_up", method="keep_all"),),
+            pattern=masks_lib.PerRow(0.5), t_max=2)
+        plan = pruning.plan_pruning(api, params, recipe)
+        with pytest.raises(ValueError, match=r"keep_all.*layers\.mlp\.w_up"):
+            pruning.PruneExecutor(api, params, plan, taps=taps,
+                                  ckpt_dir=tmp_path).run()
+        from repro import ckpt
+        assert ckpt.latest_valid(
+            tmp_path / "groups" / "layers.mlp.w_up") is None
+    finally:
+        from repro.pruning import engine
+        del engine.REFINERS["keep_all"]

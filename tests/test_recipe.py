@@ -1,0 +1,270 @@
+"""Recipes and plans: parsing, JSON round-trips, glob resolution on the
+stacked families (MoE experts, zamba shared blocks), engine-path costing.
+
+Everything here runs on shape-only site specs (``jax.eval_shape`` param
+trees) — no calibration, no refinement."""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks as masks_lib
+
+
+def _specs(arch):
+    cfg = configs.get_tiny(arch)
+    api = models.build(cfg)
+    abstract = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    return api, abstract, pruning.site_specs(cfg, abstract)
+
+
+# ---------------------------------------------------------------------------
+# parse_pattern (the deduplicated parser)
+# ---------------------------------------------------------------------------
+
+def test_parse_pattern_strings():
+    assert masks_lib.parse_pattern("0.6") == masks_lib.PerRow(0.6)
+    assert masks_lib.parse_pattern("2:4") == masks_lib.NM(2, 4)
+    assert masks_lib.parse_pattern(0.5) == masks_lib.PerRow(0.5)
+    p = masks_lib.NM(1, 4)
+    assert masks_lib.parse_pattern(p) is p
+
+
+def test_parse_pattern_round_trip():
+    for p in (masks_lib.PerRow(0.6), masks_lib.PerRow(0.55),
+              masks_lib.NM(2, 4), masks_lib.NM(1, 8)):
+        assert masks_lib.parse_pattern(masks_lib.format_pattern(p)) == p
+
+
+@pytest.mark.parametrize("bad", ["abc", "4:2", "0:4", "1.5", "-0.1", "2:4:8"])
+def test_parse_pattern_rejects(bad):
+    with pytest.raises(ValueError):
+        masks_lib.parse_pattern(bad)
+
+
+def test_launcher_and_benchmarks_share_parser():
+    from repro.launch import prune as launch_prune
+    import sys
+    sys.path.insert(0, "benchmarks")
+    try:
+        import common as bench_common
+    finally:
+        sys.path.pop(0)
+    assert launch_prune.parse_pattern is masks_lib.parse_pattern
+    assert bench_common.parse_pattern is masks_lib.parse_pattern
+
+
+# ---------------------------------------------------------------------------
+# recipe JSON + resolution
+# ---------------------------------------------------------------------------
+
+def _mixed_recipe():
+    return pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4),
+                                t_max=7),
+               pruning.SiteRule("*.mlp.w_down", skip=True),
+               pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6),
+                                method="dsnot", eps=0.01)),
+        method="sparseswaps", warmstart="wanda", t_max=50)
+
+
+def test_recipe_json_round_trip():
+    r = _mixed_recipe()
+    assert pruning.PruneRecipe.from_json(r.to_json()) == r
+    # and defaults-only (the prune_model shim's recipe)
+    s = pruning.PruneRecipe.single(masks_lib.NM(2, 4), t_max=9)
+    assert pruning.PruneRecipe.from_json(s.to_json()) == s
+
+
+def test_recipe_json_rejects_unknown_keys():
+    with pytest.raises(ValueError):
+        pruning.PruneRecipe.from_json('{"rules": [{"select": "*", "foo": 1}]}')
+    with pytest.raises(ValueError):
+        pruning.PruneRecipe.from_json('{"defaultz": {}}')
+
+
+def test_first_match_wins():
+    r = _mixed_recipe()
+    res = r.resolve("layers.attn.wq")
+    assert res.pattern == masks_lib.NM(2, 4) and res.t_max == 7
+    assert res.method == "sparseswaps"          # inherited default
+    res = r.resolve("layers.mlp.w_down")
+    assert res.skip
+    res = r.resolve("layers.mlp.w_up")
+    assert res.pattern == masks_lib.PerRow(0.6)
+    assert res.method == "dsnot" and res.eps == 0.01 and res.t_max == 50
+
+
+def test_glob_resolution_moe_sites():
+    api, abstract, specs = _specs("mixtral-8x7b")
+    names = [s.name for s in specs]
+    assert "layers.moe.w_up" in names
+    r = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("layers.moe.*", pattern=masks_lib.NM(2, 4)),
+               pruning.SiteRule("*", pattern=masks_lib.PerRow(0.5))))
+    r.validate(specs)
+    for s in specs:
+        res = r.resolve(s.name, tuple(s.labels()))
+        want = (masks_lib.NM(2, 4) if s.name.startswith("layers.moe.")
+                else masks_lib.PerRow(0.5))
+        assert res.pattern == want, s.name
+    # per-instance labels carry the expert index and match label globs
+    moe = next(s for s in specs if s.name == "layers.moe.w_up")
+    assert f"{moe.name}[0, 0]" in moe.labels()
+    r2 = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("layers.moe.w_up*",
+                                pattern=masks_lib.NM(1, 4)),),
+        pattern=masks_lib.PerRow(0.5))
+    assert r2.resolve(moe.name, tuple(moe.labels())).pattern == \
+        masks_lib.NM(1, 4)
+    # a label written verbatim matches too (the [..] brackets are NOT a
+    # character class when the string equals a label exactly); selection
+    # stays per-group
+    r3 = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("layers.moe.w_up[0, 0]",
+                                pattern=masks_lib.NM(2, 4)),),
+        pattern=masks_lib.PerRow(0.5))
+    r3.validate(specs)
+    assert r3.resolve(moe.name, tuple(moe.labels())).pattern == \
+        masks_lib.NM(2, 4)
+
+
+def test_glob_resolution_zamba_sites():
+    api, abstract, specs = _specs("zamba2-7b")
+    names = {s.name for s in specs}
+    assert {"layers.mamba.in_proj", "shared.attn.wq",
+            "shared.mlp.w_down"} <= names
+    r = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("shared.*", pattern=masks_lib.NM(2, 4)),
+               pruning.SiteRule("layers.mamba.*", skip=True)),
+        pattern=masks_lib.PerRow(0.5))
+    r.validate(specs)
+    assert r.resolve("shared.mlp.w_gate").pattern == masks_lib.NM(2, 4)
+    assert r.resolve("layers.mamba.in_proj").skip
+    plan = pruning.plan_pruning(api, abstract, r)
+    by_name = {g.name: g for g in plan.groups}
+    assert by_name["layers.mamba.in_proj"].engine_path == "skip"
+    assert by_name["shared.attn.wq"].rule.pattern_str == "2:4"
+
+
+def test_validate_dead_glob_raises():
+    api, abstract, specs = _specs("llama31-8b")
+    r = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.does_not_exist", skip=True),),
+        pattern=masks_lib.PerRow(0.5))
+    with pytest.raises(ValueError, match="never selected"):
+        r.validate(specs)
+    with pytest.raises(ValueError, match="never selected"):
+        pruning.plan_pruning(api, abstract, r)
+
+
+def test_validate_shadowed_rule_raises():
+    """A catch-all placed before a narrower rule silently wins every
+    site — validate flags the shadowed rule instead."""
+    _, _, specs = _specs("llama31-8b")
+    r = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6)),
+               pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4))))
+    with pytest.raises(ValueError, match=r"shadowed.*\*\.attn\.\*"):
+        r.validate(specs)
+    # correct order passes
+    pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4)),
+               pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6)))
+    ).validate(specs)
+
+
+def test_recipe_json_coerces_float_t_max():
+    r = pruning.PruneRecipe.from_json(
+        '{"defaults": {"pattern": "0.6", "t_max": 50.0},'
+        ' "rules": [{"select": "*", "t_max": 7.0}]}')
+    assert r.t_max == 50 and isinstance(r.t_max, int)
+    assert r.rules[0].t_max == 7 and isinstance(r.rules[0].t_max, int)
+    with pytest.raises(ValueError, match="integer"):
+        pruning.PruneRecipe.from_json('{"defaults": {"t_max": 50.5}}')
+
+
+def test_validate_unknown_method_and_missing_pattern():
+    _, _, specs = _specs("llama31-8b")
+    with pytest.raises(ValueError, match="unknown method"):
+        pruning.PruneRecipe(pattern=masks_lib.PerRow(0.5),
+                            method="nope").validate(specs)
+    with pytest.raises(ValueError, match="no pattern"):
+        pruning.PruneRecipe().validate(specs)
+    with pytest.raises(ValueError, match="unknown warmstart"):
+        pruning.PruneRecipe(pattern=masks_lib.PerRow(0.5),
+                            warmstart="nope").validate(specs)
+
+
+def test_validate_nm_divisibility_at_plan_time():
+    """An infeasible N:M rule fails at plan time, not after calibration."""
+    api, abstract, specs = _specs("llama31-8b")   # d_in 64/96, 7 divides neither
+    r = pruning.PruneRecipe.single(masks_lib.NM(3, 7))
+    with pytest.raises(ValueError, match="not divisible by M=7"):
+        r.validate(specs)
+    with pytest.raises(ValueError, match="not divisible by M=7"):
+        pruning.plan_pruning(api, abstract, r)
+    # a rule scoped to divisible sites passes
+    pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", pattern=masks_lib.NM(2, 4)),),
+        pattern=masks_lib.PerRow(0.5)).validate(specs)
+
+
+def test_recipe_json_rejects_unknown_defaults_keys():
+    with pytest.raises(ValueError, match="defaults keys"):
+        pruning.PruneRecipe.from_json('{"defaults": {"tmax": 50}}')
+
+
+# ---------------------------------------------------------------------------
+# plans: engine paths + cost estimates, shapes only
+# ---------------------------------------------------------------------------
+
+def _one_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("d",))
+
+
+def test_plan_costs_and_paths_no_mesh():
+    api, abstract, specs = _specs("llama31-8b")
+    plan = pruning.plan_pruning(
+        api, abstract, pruning.PruneRecipe.single(masks_lib.PerRow(0.6)))
+    assert all(g.engine_path == "batched" for g in plan.groups)
+    for g in plan.groups:
+        s = g.spec
+        assert g.weight_bytes == 4 * s.n_instances * s.d_out * s.d_in
+        assert g.gram_bytes == 4 * s.n_instances * s.d_in * s.d_in
+    assert plan.total_gram_bytes() == sum(g.gram_bytes for g in plan.groups)
+    assert "batched" in plan.describe()
+
+
+def test_plan_marks_single_device_groups():
+    """mesh= with a method lacking a distributed refiner is surfaced in
+    the dry plan, not discovered mid-run."""
+    api, abstract, _ = _specs("llama31-8b")
+    recipe = pruning.PruneRecipe(
+        rules=(pruning.SiteRule("*.attn.*", method="dsnot"),),
+        pattern=masks_lib.PerRow(0.5))
+    plan = pruning.plan_pruning(api, abstract, recipe,
+                                mesh=_one_device_mesh())
+    single = plan.single_device_groups()
+    assert set(single) == {"layers.attn.wq", "layers.attn.wk",
+                           "layers.attn.wv", "layers.attn.wo"}
+    assert "single-device" in plan.describe()
+    by_name = {g.name: g for g in plan.groups}
+    assert by_name["layers.mlp.w_up"].engine_path == "rows-sharded"
+
+
+def test_plan_gram_budget_selects_gshard():
+    api, abstract, _ = _specs("llama31-8b")
+    plan = pruning.plan_pruning(
+        api, abstract, pruning.PruneRecipe.single(masks_lib.PerRow(0.6)),
+        mesh=_one_device_mesh(), gram_budget_bytes=1)
+    # every unstructured Gram exceeds one byte -> column-sharded G
+    assert all(g.engine_path == "gram-sharded" for g in plan.groups)
+    # N:M swaps stay within blocks: rows-sharded regardless of budget
+    plan_nm = pruning.plan_pruning(
+        api, abstract, pruning.PruneRecipe.single(masks_lib.NM(2, 4)),
+        mesh=_one_device_mesh(), gram_budget_bytes=1)
+    assert all(g.engine_path == "rows-sharded" for g in plan_nm.groups)
