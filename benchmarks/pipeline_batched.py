@@ -9,6 +9,16 @@ refactor introduced:
 * ``rows_sharded``  — the mesh dispatch through
   ``distributed.refine_rows_sharded`` on every local device.
 
+Also times calibration throughput (tokens/s, peak tap bytes) under the
+three accumulation paths of the stats refactor:
+
+* ``calib_host_summed``  — the legacy loop: jit the taps, sum the tap
+  tree on the host every batch;
+* ``calib_donated``      — ``stats.accumulate_stats``: one jitted step
+  with the accumulator donated and device-resident;
+* ``calib_sharded``      — batches sharded over the local mesh's data
+  axis, per-device partials psum_gram-merged.
+
 Emits ``BENCH_pipeline.json`` at the repo root so later PRs accumulate a
 perf trajectory (``cold_s`` includes compilation; ``wall_s`` is the best
 warm repeat). Run with
@@ -26,14 +36,90 @@ import time
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 
 import repro.configs as configs
 import repro.models as models
 from repro import pruning
 from repro.core import masks as masks_lib
 from repro.launch import mesh as mesh_lib
+from repro.pruning import stats as stats_lib
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_pipeline.json"
+
+
+def bench_calibration(api, cfg, *, n_samples=64, seq_len=64, batch_size=8,
+                      repeats=3, verbose=True):
+    """Calibration throughput rows (tokens/s + peak tap bytes).
+
+    The jitted step of each variant is built ONCE and reused across
+    repeats — the first repeat pays compilation (``cold_s``), the warm
+    repeats time pure accumulation, mirroring a real calibration job
+    (one trace, thousands of batches).
+    """
+    params = api.init(jax.random.key(0))
+    batches = list(pruning.calibration_batches(
+        cfg, n_samples=n_samples, seq_len=seq_len, batch_size=batch_size))
+    tokens = len(batches) * batch_size * seq_len
+    mesh = mesh_lib.make_host_mesh()
+    spec = stats_lib.CalibSpec.full(cfg)
+    state0 = stats_lib.init_state(api, spec, params, batches[0])
+    tap_bytes = sum(l.size * l.dtype.itemsize
+                    for l in jax.tree.leaves(state0))
+
+    tap_step = pruning.make_tap_step(api)
+
+    def host_summed():
+        total = None
+        for b in batches:
+            t = tap_step(params, b)
+            total = t if total is None else jax.tree.map(jnp.add, total, t)
+        return total
+
+    carry_step = stats_lib.make_carry_step(api, spec)
+
+    def donated():
+        state = jax.tree.map(jnp.zeros_like, state0)
+        for b in batches:
+            state = carry_step(params, state, b)
+        return state
+
+    variants = {"calib_host_summed": host_summed, "calib_donated": donated}
+
+    if stats_lib.batch_shardable(batches[0], mesh):
+        from repro.dist import specs as specs_lib
+        sharded_step = stats_lib.make_sharded_step(api, spec, mesh,
+                                                   batches[0], state0)
+        state_shardings = specs_lib.named(
+            mesh, specs_lib.calib_pspecs(state0, mesh))
+
+        def sharded():
+            state = jax.device_put(jax.tree.map(jnp.zeros_like, state0),
+                                   state_shardings)
+            for b in batches:
+                state = sharded_step(params, state, b)
+            return state
+
+        variants["calib_sharded"] = sharded
+    elif verbose:
+        print(f"  calib_sharded skipped: batch {batch_size} does not "
+              f"divide the mesh data axes {dict(mesh.shape)}")
+    rows = []
+    for name, fn in variants.items():
+        times = []
+        for _ in range(max(repeats, 2)):
+            t0 = time.time()
+            jax.block_until_ready(jax.tree.leaves(fn()))
+            times.append(time.time() - t0)
+        warm = min(times[1:])
+        rows.append({"variant": name, "cold_s": times[0], "wall_s": warm,
+                     "repeats_s": times, "tokens": tokens,
+                     "tokens_per_s": tokens / warm,
+                     "peak_tap_bytes": tap_bytes})
+        if verbose:
+            print(f"  {name:18s} cold {times[0]:6.2f}s  warm {warm:6.2f}s  "
+                  f"{tokens/warm:9.0f} tok/s  taps {tap_bytes/2**20:.2f} MiB")
+    return rows
 
 
 def _bench_cfg(arch: str):
@@ -101,6 +187,11 @@ def run(arch: str = "llama31-8b", *, t_max: int = 20, sparsity: float = 0.6,
     if verbose:
         print(f"  {'plan_execute':14s} cold {times[0]:6.2f}s  "
               f"warm {min(times[1:]):6.2f}s  (plan+describe {plan_s:.3f}s)")
+
+    if verbose:
+        print("calibration throughput:")
+    rows.extend(bench_calibration(api, cfg, repeats=repeats,
+                                  verbose=verbose))
 
     out = {"arch": arch, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
            "t_max": t_max, "sparsity": sparsity,

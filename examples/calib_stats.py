@@ -1,0 +1,52 @@
+"""Streaming recipe-aware calibration (pruning.stats), end to end.
+
+    PYTHONPATH=src python examples/calib_stats.py
+
+A mixed recipe on a tiny transformer: skip the fragile down-projection,
+refine attention with DSnoT, everything else with SparseSwaps. The
+calibration spec derived from the plan then accumulates *only* what the
+recipe will use — no tap state at all for the skipped site, O(d) feature
+moments instead of the O(d²) Gram for the DSnoT-only sites — through the
+donated-carry streaming accumulator, and the executor consumes the
+resulting ``CalibStats`` directly. The CI smoke job runs this script and
+relies on its assertions.
+"""
+import jax
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks
+
+cfg = configs.get_tiny("llama31-8b")
+api = models.build(cfg)
+params = api.init(jax.random.key(0))
+
+recipe = pruning.PruneRecipe(rules=(
+    pruning.SiteRule("*.mlp.w_down", skip=True),            # stays dense
+    pruning.SiteRule("*.attn.*", method="dsnot",
+                     pattern=masks.NM(2, 4)),
+    pruning.SiteRule("*", pattern=masks.PerRow(0.6))), t_max=20)
+
+plan = pruning.plan_pruning(api, params, recipe)
+print(plan.describe())                       # includes the calibration block
+
+batches = pruning.calibration_batches(cfg, n_samples=8, seq_len=64,
+                                      batch_size=4)
+spec = plan.calib_spec(minimal=True)
+stats = pruning.accumulate_stats(api, params, batches, spec=spec)
+
+# the skip-rule site accumulated NO tap state...
+assert "w_down" not in stats.taps, sorted(stats.taps)
+# ...dsnot sites carry feature moments only (no (d, d) Gram)...
+assert set(stats.taps["wq"]) == {"d", "s", "n"}, set(stats.taps["wq"])
+# ...and sparseswaps sites keep the full Gram.
+assert set(stats.taps["w_gate"]) == {"g", "s", "n"}
+print(f"calibration state: {stats.tap_bytes()/2**20:.2f} MiB over "
+      f"{stats.batches} batches, taps: {sorted(stats.taps)}")
+
+report = pruning.PruneExecutor(api, params, plan, stats=stats).run()
+print(report.summary())
+assert "w_down" not in report.masks["layers"].get("mlp", {})
+print("OK: skip-rule tap absent, moments-level dsnot, executor consumed "
+      "CalibStats")

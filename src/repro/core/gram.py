@@ -37,8 +37,14 @@ def update_from_acts(G: jnp.ndarray, acts: jnp.ndarray) -> jnp.ndarray:
 
 
 def feature_norms(G: jnp.ndarray) -> jnp.ndarray:
-    """‖X_{j,:}‖₂ per input feature = sqrt(G_jj)."""
-    return jnp.sqrt(jnp.clip(jnp.diagonal(G), 0.0, None))
+    """‖X_{j,:}‖₂ per input feature = sqrt(G_jj).
+
+    ``G`` may be the full (d, d) Gram or just its (d,) diagonal — the
+    moments-level calibration statistics (``pruning.stats``) carry only
+    diag(G), which is all Wanda/RIA warmstarts need.
+    """
+    diag = G if G.ndim == 1 else jnp.diagonal(G)
+    return jnp.sqrt(jnp.clip(diag, 0.0, None))
 
 
 @dataclasses.dataclass
@@ -83,6 +89,35 @@ jax.tree_util.register_pytree_node(
     lambda s: ((s.G, s.count, s.mean, s.m2), None),
     lambda _, c: GramState(*c),
 )
+
+
+def state_from_moments(g: jnp.ndarray, s: jnp.ndarray,
+                       n: jnp.ndarray) -> GramState:
+    """Raw calibration moments (taps) -> a ``GramState``-shaped pytree.
+
+    ``g`` is either the full Gram stack (..., d, d) or its diagonal
+    (..., d); ``s`` the feature sums (..., d); ``n`` the token counts
+    (...,). Supports arbitrary leading stack dims (layers, experts) —
+    ``count`` is kept with a trailing singleton so the ``psum_gram``
+    broadcasts (``mean * count`` etc.) stay shape-correct. Exact algebra:
+    mean = s/n and m2 = Σx² − n·mean², so a round-trip through
+    ``moments_from_state`` reproduces the raw sums.
+    """
+    g = jnp.asarray(g, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)[..., None]
+    diag = g if g.shape == s.shape else jnp.diagonal(g, axis1=-2, axis2=-1)
+    safe = jnp.maximum(n, 1.0)
+    mean = s / safe
+    m2 = diag - n * mean**2
+    return GramState(G=g, count=n, mean=mean, m2=m2)
+
+
+def moments_from_state(state: GramState) -> tuple:
+    """Inverse of ``state_from_moments``: (g, s, n) raw sums."""
+    n = state.count
+    s = state.mean * n
+    return state.G, s, n[..., 0]
 
 
 def psum_gram(state: GramState, axis_name) -> GramState:

@@ -149,6 +149,33 @@ def batch_pspecs(cfg: ArchConfig, batch: Any, mesh) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# calibration accumulators
+# ---------------------------------------------------------------------------
+
+def calib_pspecs(state: Any, mesh) -> Any:
+    """Specs for a calibration accumulator tree (``pruning.stats``).
+
+    The accumulator is replicated over the data-parallel axes (every
+    device folds in its own batch shard and the partials psum-merge), but
+    the O(d²) Gram leaves — square trailing dims — column-shard over
+    "model" when divisible, so the carried state costs 1/TP of its full
+    footprint per device. G is symmetric, so a column shard is as good as
+    a row shard for every consumer. Vector/scalar moments replicate.
+    """
+    ms = mesh.shape
+    model = ms.get("model", 1)
+
+    def leaf(l) -> P:
+        shape = tuple(l.shape)
+        if (model > 1 and len(shape) >= 2 and shape[-1] == shape[-2]
+                and shape[-1] % model == 0):
+            return P(*([None] * (len(shape) - 1)), "model")
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(leaf, state)
+
+
+# ---------------------------------------------------------------------------
 # materialization
 # ---------------------------------------------------------------------------
 

@@ -90,3 +90,16 @@ def gram_xtx(
 def gram_update(G: jnp.ndarray, x: jnp.ndarray, **kw) -> jnp.ndarray:
     """Streaming G += Xᵀ X using the kernel for the chunk product."""
     return G.astype(jnp.float32) + gram_xtx(x, **kw)
+
+
+def gram_xtx_stacked(x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Per-slice XᵀX for x: (N, ..., tokens, d) -> (N, d, d) fp32.
+
+    The MoE calibration path: one Gram per expert over that expert's
+    capacity buffer (zero-padded slots contribute zero). vmapping the
+    padded Pallas kernel keeps each slice's tiling identical, so the grid
+    is compiled once and batched.
+    """
+    N = x.shape[0]
+    return jax.vmap(lambda xi: gram_xtx(xi, **kw))(
+        x.reshape(N, -1, x.shape[-1]))

@@ -11,10 +11,14 @@ a JSON report. ``--recipe recipe.json`` swaps the single global rule for
 a declarative per-site recipe (mixed N:M + unstructured, skip-lists,
 per-rule t_max); ``--from-ckpt`` prunes a trained checkpoint.
 
-Calibration Gram accumulation checkpoints every ``--calib-ckpt-every``
-batches, and with ``--out-dir`` every completed site group's masks land
-under ``<out>/prune_ckpt`` — an interrupted refinement resumes at the
-group it died on (DESIGN §6).
+Calibration streams through ``pruning.stats``: recipe-aware tap
+selection (skip-rule sites accumulate nothing), a donated-carry
+accumulator, and — with ``--mesh`` — batches sharded along the data axis.
+``--calib-stats minimal`` additionally drops dsnot-only sites to O(d)
+moments. Accumulation checkpoints every ``--calib-ckpt-every`` batches
+under ``<out>/prune_ckpt/calib``, and with ``--out-dir`` every completed
+site group's masks land under ``<out>/prune_ckpt`` — an interrupted run
+resumes at the calibration batch / site group it died on (DESIGN §6).
 """
 from __future__ import annotations
 
@@ -51,7 +55,7 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
           out_dir: str | None = None, seed: int = 0,
           calib_ckpt_every: int = 0, mesh: str | None = None,
           recipe: str | None = None, plan_only: bool = False,
-          verbose: bool = True) -> dict:
+          calib_stats: str = "full", verbose: bool = True) -> dict:
     """``mesh``: None (single device), "host" (all local devices), or
     "production" — sparseswaps refinement then runs row-sharded via
     repro.dist (groups whose method has no distributed refiner are marked
@@ -91,21 +95,16 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
         cfg, n_samples=n_calib, seq_len=calib_seq, batch_size=calib_batch,
         seed=seed))
 
-    ckpt_fn = None
-    if out_dir and calib_ckpt_every:
-        calib_dir = Path(out_dir) / "calib_ckpt"
-
-        def ckpt_fn(i, taps):  # noqa: F811
-            ckpt.save(calib_dir, i, taps)
-
-    taps = pruning.accumulate(api, params, batches,
-                              checkpoint_every=calib_ckpt_every,
-                              checkpoint_fn=ckpt_fn)
+    # streaming recipe-aware calibration (pruning.stats) driven by the
+    # executor: skip-rule taps never accumulate; "minimal" drops
+    # dsnot-only sites to feature moments; mesh= shards the batches
+    spec = plan.calib_spec(minimal=(calib_stats == "minimal"))
     executor = pruning.PruneExecutor(
-        api, params, plan, taps=taps,
+        api, params, plan, calib_spec=spec,
+        calib_ckpt_every=calib_ckpt_every,
         ckpt_dir=Path(out_dir) / "prune_ckpt" if out_dir else None,
         callback=pruning.PrintProgress() if verbose else None)
-    report = executor.run()
+    report = executor.run(batches)
     dense_eval = pruning.evaluate(api, params, seed=seed)
     eval_params = report.updated_params if report.updated_params is not None \
         else params
@@ -157,12 +156,22 @@ def main(argv=None):
                     help="per-site rules (overrides --sparsity/--method/...)")
     ap.add_argument("--plan-only", action="store_true",
                     help="print the resolved plan table and exit")
+    ap.add_argument("--calib-stats", default="full",
+                    choices=["full", "minimal"],
+                    help="full: skip-aware Gram for every refined site; "
+                         "minimal: dsnot-only sites drop to O(d) moments "
+                         "(their reported losses become diagonal proxies)")
+    ap.add_argument("--calib-ckpt-every", type=int, default=0,
+                    help="checkpoint the calibration accumulator every k "
+                         "batches (under <out>/prune_ckpt/calib)")
     args = ap.parse_args(argv)
     prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
           warmstart=args.warmstart, method=args.method, t_max=args.t_max,
           n_calib=args.n_calib, from_ckpt=args.from_ckpt,
           out_dir=args.out_dir, seed=args.seed, mesh=args.mesh,
-          recipe=args.recipe, plan_only=args.plan_only)
+          recipe=args.recipe, plan_only=args.plan_only,
+          calib_stats=args.calib_stats,
+          calib_ckpt_every=args.calib_ckpt_every)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ Conventions:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -21,7 +22,114 @@ Params = dict
 # name -> {"g": (d_in, d_in) gram, "s": (d_in,) feature sums, "n": () count}
 # g feeds SparseSwaps/Wanda/RIA/SparseGPT; s/n give DSnoT its feature
 # means/variances (mu = s/n, E[x^2] = diag(g)/n) from the same single pass.
+# Under a reduced TapPolicy an entry may carry "d" (the (d_in,) diagonal
+# Σx² per feature) instead of the full "g" — see repro.pruning.stats.
 Taps = dict
+
+
+# ---------------------------------------------------------------------------
+# tap emission policy (pluggable accumulator)
+# ---------------------------------------------------------------------------
+
+class TapPolicy:
+    """Decides what calibration statistics a tap site emits, and how.
+
+    ``dense`` (and the MoE block) route every tap through the active
+    policy instead of hard-coding the full {g, s, n} entry, so the same
+    model code serves both the legacy dict path and the recipe-aware
+    streaming path (``repro.pruning.stats``):
+
+    * ``fields(name)`` — which statistics the tap named ``name`` emits:
+      any subset of ``("g", "d", "s", "n")`` where ``g`` is the full
+      (d, d) Gram contribution, ``d`` its diagonal only (Σx² per
+      feature), ``s`` the feature sums and ``n`` the token count.
+      An empty tuple skips the tap entirely (no state, no FLOPs).
+    * ``gram(x2)`` — the XᵀX kernel for a flattened (tokens, d) chunk;
+      overridden to the Pallas ``kernels.ops.gram_xtx`` on TPU.
+    * ``gram_experts(x5)`` — the MoE capacity-buffer variant,
+      (B, groups, E, cap, d) -> (E, d, d).
+
+    Policies are consulted at *trace* time, so a jitted calibration step
+    bakes its policy in; install one with ``use_tap_policy`` around the
+    trace (re-jit per policy).
+    """
+
+    def fields(self, name: str) -> tuple[str, ...]:
+        return ("g", "s", "n")
+
+    def gram(self, x2: jnp.ndarray) -> jnp.ndarray:
+        return x2.T @ x2
+
+    def gram_experts(self, x5: jnp.ndarray) -> jnp.ndarray:
+        return jnp.einsum("bneci,bnecj->eij", x5, x5)
+
+
+DEFAULT_TAP_POLICY = TapPolicy()
+_tap_policy: TapPolicy = DEFAULT_TAP_POLICY
+
+
+def tap_policy() -> TapPolicy:
+    """The policy currently governing tap emission."""
+    return _tap_policy
+
+
+@contextlib.contextmanager
+def use_tap_policy(policy: TapPolicy):
+    """Install ``policy`` for the dynamic (trace-time) extent of the block."""
+    global _tap_policy
+    prev = _tap_policy
+    _tap_policy = policy
+    try:
+        yield
+    finally:
+        _tap_policy = prev
+
+
+def emit_tap(taps: Taps, name: str, x: jnp.ndarray) -> None:
+    """Accumulate ``x``'s calibration statistics into ``taps[name]``.
+
+    The single emission hook for every standard (non-MoE) prunable
+    linear: builds the entry the active policy asks for and tree-adds it
+    into the dict (created on first use). A policy returning no fields
+    leaves the dict untouched — the tap never materializes.
+    """
+    pol = _tap_policy
+    fields = pol.fields(name)
+    if not fields:
+        return
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    ent = {}
+    if "g" in fields:
+        ent["g"] = pol.gram(x2)
+    if "d" in fields:
+        ent["d"] = jnp.sum(x2 * x2, axis=0)
+    if "s" in fields:
+        ent["s"] = jnp.sum(x2, axis=0)
+    if "n" in fields:
+        ent["n"] = jnp.float32(x2.shape[0])
+    prev = taps.get(name)
+    taps[name] = ent if prev is None else jax.tree.map(jnp.add, prev, ent)
+
+
+def zero_tap_entry(name: str, d: int) -> dict:
+    """The all-zero entry ``emit_tap`` would produce for a (·, d) input.
+
+    Models that emit taps conditionally (zamba's shared block behind a
+    ``lax.cond``) use this to build the structurally-matching zero branch
+    under whatever policy is active; ``{}`` means the tap is disabled.
+    """
+    pol = _tap_policy
+    fields = pol.fields(name)
+    ent = {}
+    if "g" in fields:
+        ent["g"] = jnp.zeros((d, d), jnp.float32)
+    if "d" in fields:
+        ent["d"] = jnp.zeros((d,), jnp.float32)
+    if "s" in fields:
+        ent["s"] = jnp.zeros((d,), jnp.float32)
+    if "n" in fields:
+        ent["n"] = jnp.float32(0.0)
+    return ent
 
 
 # ---------------------------------------------------------------------------
@@ -50,19 +158,12 @@ def dense(
 ) -> jnp.ndarray:
     """y = x @ ((mask ⊙ w)ᵀ). x: (..., d_in), w: (d_out, d_in).
 
-    When ``taps`` is a dict and ``tap`` a name, accumulates the Gram
-    contribution of x into taps[tap] (created on first use).
+    When ``taps`` is a dict and ``tap`` a name, accumulates the
+    statistics the active ``TapPolicy`` selects for x into taps[tap]
+    (created on first use; may be skipped entirely by the policy).
     """
     if taps is not None and tap is not None:
-        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        ent = {
-            "g": x2.T @ x2,
-            "s": jnp.sum(x2, axis=0),
-            "n": jnp.float32(x2.shape[0]),
-        }
-        prev = taps.get(tap)
-        taps[tap] = ent if prev is None else jax.tree.map(
-            jnp.add, prev, ent)
+        emit_tap(taps, tap, x)
     if mask is not None:
         w = w * mask.astype(w.dtype)
     return x @ w.T.astype(x.dtype)

@@ -110,17 +110,18 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
     buf = constrain(buf, "batch", "seq" if ng > 1 else None, "expert",
                     None, None)
 
-    if taps is not None:
-        b32 = buf.astype(jnp.float32)
+    pol = common.tap_policy()
+    f_up = pol.fields("moe_w_up") if taps is not None else ()
+    f_down = pol.fields("moe_w_down") if taps is not None else ()
+    n_e = None
+    if "n" in f_up or "n" in f_down:
         filled = (dest < e * cap).astype(jnp.float32)            # (B*ng, gs*k)
         dest_e = jnp.clip(dest // cap, 0, e - 1)
         n_e = jnp.zeros((e,), jnp.float32).at[dest_e.reshape(-1)].add(
             filled.reshape(-1))                                   # tokens/expert
-        _tap_add(taps, "moe_w_up", {
-            "g": jnp.einsum("bneci,bnecj->eij", b32, b32),
-            "s": jnp.einsum("bneci->ei", b32),
-            "n": n_e,
-        })
+    if f_up:
+        b32 = buf.astype(jnp.float32)
+        _tap_add(taps, "moe_w_up", _moe_tap_entry(pol, f_up, b32, n_e))
 
     act = ACTS[cfg.act]
     wg = _masked(p["w_gate"], m("w_gate"))
@@ -134,13 +135,9 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
     # axis can appear once per spec).
     h = constrain(h, "batch", "seq" if ng > 1 else None, "expert", None,
                   None if ng > 1 else "mlp")
-    if taps is not None:
+    if f_down:
         h32 = h.astype(jnp.float32)
-        _tap_add(taps, "moe_w_down", {
-            "g": jnp.einsum("bneci,bnecj->eij", h32, h32),
-            "s": jnp.einsum("bneci->ei", h32),
-            "n": taps["moe_w_up"]["n"],
-        })
+        _tap_add(taps, "moe_w_down", _moe_tap_entry(pol, f_down, h32, n_e))
     out_buf = jnp.einsum("bnecf,edf->bnecd", h, wd.astype(h.dtype))
 
     out = jax.vmap(
@@ -167,3 +164,22 @@ def _masked(w, mask):
 def _tap_add(taps, name, ent):
     prev = taps.get(name)
     taps[name] = ent if prev is None else jax.tree.map(jnp.add, prev, ent)
+
+
+def _moe_tap_entry(pol, fields, x5, n_e):
+    """Per-expert tap entry over the (B, groups, E, cap, d) capacity buffer.
+
+    Dropped/empty capacity slots are zero-padded and contribute zero to
+    every moment, so the buffer layout stays calibration-exact under any
+    field subset.
+    """
+    ent = {}
+    if "g" in fields:
+        ent["g"] = pol.gram_experts(x5)
+    if "d" in fields:
+        ent["d"] = jnp.einsum("bneci,bneci->ei", x5, x5)
+    if "s" in fields:
+        ent["s"] = jnp.einsum("bneci->ei", x5)
+    if "n" in fields:
+        ent["n"] = n_e
+    return ent

@@ -103,12 +103,23 @@ def mamba_layer(p, x, cfg, *, masks=None, want_taps=False):
 
 
 def _zero_shared_taps(cfg) -> dict:
+    """Zero taps for non-invocation layers, mirroring the active TapPolicy.
+
+    Both branches of the shared-block ``lax.cond`` must return identical
+    structures, so the zero branch asks the policy for exactly the fields
+    ``emit_tap`` would produce — a policy-skipped tap is absent here too.
+    """
     d2, f, hdh = 2 * cfg.d_model, cfg.d_ff, cfg.n_heads * cfg.head_dim
-    z = lambda d: {"g": jnp.zeros((d, d), jnp.float32),
-                   "s": jnp.zeros((d,), jnp.float32),
-                   "n": jnp.float32(0.0)}
-    return {"wq": z(d2), "wk": z(d2), "wv": z(d2), "wo": z(hdh),
-            "w_gate": z(d2), "w_up": z(d2), "w_down": z(f)}
+    dims = [("wq", d2), ("wk", d2), ("wv", d2), ("wo", hdh),
+            ("w_up", d2), ("w_down", f)]
+    if cfg.mlp == "gated":
+        dims.insert(4, ("w_gate", d2))
+    out = {}
+    for name, d in dims:
+        ent = common.zero_tap_entry(name, d)
+        if ent:
+            out[name] = ent
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -12,17 +12,20 @@ from .executor import (PruneCallback, PruneExecutor, PrintProgress)
 from .pipeline import PruneReport, SiteReport, apply, prune_model
 from .plan import PlannedGroup, PrunePlan, plan_pruning
 from .recipe import PruneRecipe, ResolvedRule, SiteRule
-from .sites import (GramBatch, GramStats, SiteGroup, SiteSpec,
+from .sites import (GramBatch, GramStats, SiteGroup, SiteSpec, TapSpec,
                     build_mask_tree, enumerate_sites, prunable_param_count,
-                    site_specs)
+                    site_specs, tap_specs)
+from .stats import CalibSpec, CalibStats, accumulate_stats
 
 __all__ = [
-    "GramBatch", "GramStats", "GroupResult", "PlannedGroup", "PrintProgress",
+    "CalibSpec", "CalibStats", "GramBatch", "GramStats", "GroupResult",
+    "PlannedGroup", "PrintProgress",
     "PruneCallback", "PruneExecutor", "PrunePlan", "PruneRecipe",
     "PruneReport", "RefineContext", "ResolvedRule", "SiteGroup", "SiteReport",
-    "SiteRule", "SiteSpec", "accumulate", "apply", "build_mask_tree",
+    "SiteRule", "SiteSpec", "TapSpec", "accumulate", "accumulate_stats",
+    "apply", "build_mask_tree",
     "calibration_batches", "enumerate_sites", "evaluate", "make_tap_step",
     "perplexity", "plan_pruning", "prunable_param_count", "prune_model",
     "refine_group", "refine_group_reference", "register", "site_specs",
-    "top1_accuracy", "val_batches",
+    "tap_specs", "top1_accuracy", "val_batches",
 ]

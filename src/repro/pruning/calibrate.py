@@ -8,6 +8,14 @@ layer"), not layer-by-layer. The taps mechanism (models/common.dense)
 emits {g, s, n} per prunable site; summing over batches is exact because
 G, Σx and counts are additive.
 
+This module is now a thin, bit-compatible shim over ``pruning.stats`` —
+the streaming subsystem with recipe-aware tap selection, a donated-carry
+accumulator and a mesh-sharded path. ``accumulate`` keeps the historical
+contract (full statistics for every tap, the legacy taps-dict return) on
+top of the carried-state loop: starting the donated carry from zeros and
+adding batch taps reproduces the old host-summed totals bit-for-bit
+(0 + x == x in IEEE, and the per-batch tap computation is unchanged).
+
 Fault tolerance: ``checkpoint_every`` persists the partial accumulator via
 ``repro.ckpt`` so a preempted calibration job resumes at the last saved
 batch instead of restarting (DESIGN §6).
@@ -17,9 +25,10 @@ from __future__ import annotations
 from typing import Callable, Iterable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import ModelApi
+
+from . import stats as stats_lib
 
 
 def make_tap_step(api: ModelApi):
@@ -37,15 +46,26 @@ def accumulate(api: ModelApi, params, batches: Iterable[dict], *,
                checkpoint_every: int = 0,
                checkpoint_fn: Callable[[int, dict], None] | None = None,
                resume_from: tuple[int, dict] | None = None) -> dict:
-    """Sum tap statistics over calibration batches (streaming, O(state))."""
-    step = make_tap_step(api)
+    """Sum tap statistics over calibration batches (streaming, O(state)).
+
+    Migration note: new code should use ``stats.accumulate_stats`` (or
+    let ``PruneExecutor.run(calib_batches)`` drive it) — it skips taps a
+    recipe never refines, drops dsnot-only sites to O(d) moments, and
+    shards batches over a mesh. This shim always accumulates the full
+    statistics for every tap and returns the legacy taps dict.
+    """
+    spec = stats_lib.CalibSpec.full(api.cfg)
+    # no donation: the legacy contract lets checkpoint_fn (and the
+    # resume_from caller) keep references to the accumulator tree
+    step = stats_lib.make_carry_step(api, spec, donate=False)
     start, total = resume_from if resume_from is not None else (0, None)
     i = start - 1
     for i, batch in enumerate(batches):
         if i < start:
             continue
-        t = step(params, batch)
-        total = t if total is None else jax.tree.map(jnp.add, total, t)
+        if total is None:
+            total = stats_lib.init_state(api, spec, params, batch)
+        total = step(params, total, batch)
         if checkpoint_every and checkpoint_fn and (i + 1) % checkpoint_every == 0:
             checkpoint_fn(i + 1, total)
     if total is None:
@@ -63,8 +83,12 @@ def calibration_batches(cfg_arch, *, n_samples: int, seq_len: int,
     corpus = synthetic.CorpusConfig(cfg_arch.vocab_size, seed=seed)
     n_batches = (n_samples + batch_size - 1) // batch_size
     key = jax.random.key(seed)
+    # ONE pipeline for the whole stream: construction is cheap but not
+    # free, and the (seed, split, step)-keyed sampler is what guarantees
+    # a restarted job replays identical batches — rebuilding it inside
+    # the loop obscured that invariant.
+    pipe = synthetic.DataPipeline(corpus, batch_size, seq_len, split="calib")
     for i in range(n_batches):
-        pipe = synthetic.DataPipeline(corpus, batch_size, seq_len, split="calib")
         batch = pipe.get(i)
         batch = synthetic.with_modality(batch, cfg_arch, jax.random.fold_in(key, i))
         yield batch

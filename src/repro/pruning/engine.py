@@ -104,6 +104,11 @@ def refine_group(method: str, group: sites_lib.SiteGroup,
     """Refine every instance of ``group`` in one batched call."""
     if method not in REFINERS:
         raise ValueError(f"unknown method {method!r}; have {sorted(REFINERS)}")
+    if group.gram.G is None and method != "dsnot":
+        raise ValueError(
+            f"method {method!r} needs full Gram statistics but group "
+            f"{group.name!r} was calibrated at moments level — rebuild the "
+            f"CalibSpec from the current plan (pruning.stats)")
     return REFINERS[method](group.weights, group.gram, pattern, ctx)
 
 
@@ -122,6 +127,19 @@ def _warmstart_batch(W, G, pattern, criterion):
 @jax.jit
 def _row_loss_batch(W, M, G):
     return jax.vmap(sm.row_loss)(W.astype(jnp.float32), M, G)
+
+
+@jax.jit
+def _row_loss_diag_batch(W, M, diag):
+    """Diagonal (Jensen) proxy of the row loss: Σ_j c_j² G_jj.
+
+    Used when only moments-level statistics exist (dsnot under a minimal
+    ``CalibSpec``): exact for uncorrelated features, an upper bound
+    otherwise — reported losses are then proxies, not the exact quadratic
+    objective.
+    """
+    C = W.astype(jnp.float32) * (1.0 - M)
+    return jnp.einsum("nrj,nj->nr", C * C, diag.astype(jnp.float32))
 
 
 def _no_swaps(W):
@@ -167,16 +185,25 @@ def _refine_sparseswaps(W, gram, pattern, ctx):
 
 @register("dsnot")
 def _refine_dsnot(W, gram, pattern, ctx):
-    """DSnoT baseline: surrogate-driven swaps from feature mean/variance."""
+    """DSnoT baseline: surrogate-driven swaps from feature mean/variance.
+
+    Runs off moments alone: with a full Gram the warmstart uses G and the
+    reported losses are the exact row objective; at moments level the
+    warmstart scores from diag(G) (identical masks — Wanda/RIA only ever
+    read the diagonal) and losses fall back to the diagonal proxy.
+    """
     d = W.shape[2]
-    m0 = _warmstart_batch(W, gram.G, pattern, ctx.warmstart)
-    l0 = _row_loss_batch(W, m0, gram.G)
+    g_or_diag = gram.G if gram.G is not None else gram.gram_diag
+    row_loss = (_row_loss_batch if gram.G is not None
+                else _row_loss_diag_batch)
+    m0 = _warmstart_batch(W, g_or_diag, pattern, ctx.warmstart)
+    l0 = row_loss(W, m0, g_or_diag)
     block = pattern.block(d)
     m1 = jax.vmap(
         lambda w, m_, mu, var, ex2: _dsnot_rows(
             w, m_, mu, var, ex2, t_max=ctx.t_max, block=block)
     )(W.astype(jnp.float32), m0, gram.mean, gram.variance, gram.ex2)
-    l1 = _row_loss_batch(W, m1, gram.G)
+    l1 = row_loss(W, m1, g_or_diag)
     return GroupResult(masks=m1, loss_init=l0, loss_final=l1,
                        swaps=_no_swaps(W))
 
@@ -276,6 +303,16 @@ def refine_instance(W, gram: sites_lib.GramStats, pattern, *, method: str,
     reference implementation the group-batched engine is verified against.
     """
     G = gram.G
+    if G is None:
+        if method != "dsnot":
+            raise ValueError(f"method {method!r} needs full Gram statistics")
+        diag = gram.gram_diag
+        m0 = warmstart_mask(W, diag, pattern, criterion=warmstart)
+        l0 = _row_loss_diag_batch(W[None], m0[None], diag[None])[0]
+        m1 = _dsnot(W, m0, gram.mean, gram.variance, gram.ex2,
+                    pattern, t_max=t_max, row_block=row_block)
+        l1 = _row_loss_diag_batch(W[None], m1[None], diag[None])[0]
+        return m1, l0, l1, jnp.zeros(W.shape[0], jnp.int32), None
     m0 = warmstart_mask(W, G, pattern, criterion=warmstart)
     l0 = sm.row_loss(W.astype(jnp.float32), m0, G)
 

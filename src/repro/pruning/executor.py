@@ -35,10 +35,10 @@ from repro import ckpt
 from repro.core import masks as masks_lib
 from repro.models import ModelApi
 
-from . import calibrate as calibrate_lib
 from . import engine as engine_lib
 from . import plan as plan_lib
 from . import sites as sites_lib
+from . import stats as stats_lib
 
 
 @dataclasses.dataclass
@@ -152,9 +152,12 @@ def _data_fingerprint(g: sites_lib.SiteGroup) -> str:
     calibration set into the same out dir recomputes instead of silently
     restoring masks of the old weights. Hashing is O(bytes) on host,
     negligible next to refinement; only paid when ckpt_dir is set.
+    Moments-level groups (no full Gram) hash diag + mean instead.
     """
     h = hashlib.sha256()
-    for arr in (g.weights, g.gram.G):
+    stats = ((g.gram.G,) if g.gram.G is not None
+             else (g.gram.gram_diag, g.gram.mean))
+    for arr in (g.weights, *stats):
         h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
     return h.hexdigest()
 
@@ -170,8 +173,19 @@ class PruneExecutor:
     Args:
         api/params: the model being pruned.
         plan: output of ``plan_pruning`` (resolved rules + engine paths).
-        taps: precomputed calibration statistics; when ``None``,
-            ``run(calib_batches)`` accumulates them first.
+        taps: precomputed calibration statistics (legacy dict); when both
+            ``taps`` and ``stats`` are ``None``, ``run(calib_batches)``
+            accumulates a ``CalibStats`` through ``pruning.stats`` first
+            (skip-aware, donated-carry, data-sharded when the plan has a
+            mesh, resumable under ``<ckpt_dir>/calib/``).
+        stats: a ``pruning.stats.CalibStats`` — the streaming subsystem's
+            output. Validated against the plan: statistics accumulated at
+            a lower level than a group's method needs fail here, before
+            any refinement runs.
+        calib_spec: overrides the spec ``run`` auto-calibrates with
+            (e.g. ``plan.calib_spec(minimal=True)`` to drop dsnot-only
+            sites to moments level). Default: the skip-aware full-Gram
+            spec, whose reports are bit-compatible with the legacy path.
         ckpt_dir: enables per-group checkpointing under
             ``<ckpt_dir>/groups/<site>/`` and resume-on-rerun. Group
             checkpoints are keyed by the resolved rule AND a content hash
@@ -185,15 +199,43 @@ class PruneExecutor:
 
     def __init__(self, api: ModelApi, params: dict,
                  plan: plan_lib.PrunePlan, *, taps: dict | None = None,
+                 stats: stats_lib.CalibStats | None = None,
+                 calib_spec: stats_lib.CalibSpec | None = None,
+                 calib_ckpt_every: int = 0,
                  ckpt_dir: str | Path | None = None,
                  callback: PruneCallback | None = None,
                  engine_mode: str = "batched"):
         if engine_mode not in ("batched", "reference"):
             raise ValueError(f"unknown engine_mode {engine_mode!r}")
+        if taps is not None and stats is not None:
+            raise ValueError("pass either taps= (legacy dict) or stats= "
+                             "(CalibStats), not both")
         self.api = api
         self.params = params
         self.plan = plan
+        self.stats = stats
+        self.calib_spec = calib_spec
+        if stats is not None:
+            need = plan.calib_spec(minimal=True)
+            if not stats.spec.covers(need):
+                raise ValueError(
+                    "CalibStats were accumulated under a spec that does "
+                    "not cover this plan — rebuild with "
+                    "plan.calib_spec() (stats has "
+                    f"{stats.spec.levels}, plan needs {need.levels})")
+            taps = stats.taps
+        if calib_spec is not None:
+            # same up-front check for the spec run() will calibrate with:
+            # an insufficient level must fail here, not after the whole
+            # calibration pass
+            need = plan.calib_spec(minimal=True)
+            if not calib_spec.covers(need):
+                raise ValueError(
+                    "calib_spec does not cover this plan — build it with "
+                    f"plan.calib_spec() (spec has {calib_spec.levels}, "
+                    f"plan needs {need.levels})")
         self.taps = taps
+        self.calib_ckpt_every = calib_ckpt_every
         self.ckpt_dir = Path(ckpt_dir) if ckpt_dir is not None else None
         self.callback = callback or PruneCallback()
         self.engine_mode = engine_mode
@@ -277,8 +319,17 @@ class PruneExecutor:
             if calib_batches is None:
                 raise ValueError("no taps and no calib_batches to "
                                  "accumulate them from")
-            self.taps = calibrate_lib.accumulate(
-                self.api, self.params, calib_batches)
+            # streaming, skip-aware, donated-carry accumulation; batches
+            # shard over the plan's mesh when they divide its data axes
+            spec = (self.calib_spec if self.calib_spec is not None
+                    else plan.calib_spec(minimal=False))
+            self.stats = stats_lib.accumulate_stats(
+                self.api, self.params, calib_batches, spec=spec,
+                mesh=plan.mesh,
+                ckpt_dir=(self.ckpt_dir / "calib"
+                          if self.ckpt_dir is not None else None),
+                checkpoint_every=self.calib_ckpt_every)
+            self.taps = self.stats.taps
         active = [pg for pg in plan.groups if not pg.skip]
         # skip-listed groups never materialize their stacked weights/Grams
         groups = {g.name: g for g in sites_lib.enumerate_sites(

@@ -28,6 +28,7 @@ from repro.core import masks as masks_lib
 from . import engine as engine_lib
 from . import recipe as recipe_lib
 from . import sites as sites_lib
+from . import stats as stats_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,7 @@ class PrunePlan:
     swap_method: str = "auto"
     chunk: int = 512
     row_block: int | None = None
+    cfg: object = None           # ArchConfig; None only for legacy pickles
 
     @property
     def active_groups(self) -> tuple[PlannedGroup, ...]:
@@ -109,6 +111,63 @@ class PrunePlan:
     def group_context(self, g: PlannedGroup) -> engine_lib.RefineContext:
         return self.base_context().with_overrides(
             warmstart=g.rule.warmstart, t_max=g.rule.t_max, eps=g.rule.eps)
+
+    # -- calibration costing ------------------------------------------------
+
+    def calib_spec(self, *, minimal: bool = True,
+                   kernel: str = "auto") -> stats_lib.CalibSpec:
+        """The recipe-aware ``CalibSpec`` this plan needs (see stats)."""
+        return stats_lib.CalibSpec.from_plan(self.cfg, self,
+                                             minimal=minimal, kernel=kernel)
+
+    def calib_costs(self, *, minimal: bool = True) -> list[tuple]:
+        """(TapSpec, level) per calibration tap under the recipe."""
+        spec = self.calib_spec(minimal=minimal)
+        taps = sites_lib.tap_specs(self.cfg, [g.spec for g in self.groups])
+        return [(t, spec.level(t.name)) for t in taps]
+
+    def total_calib_bytes(self, *, minimal: bool = True) -> int:
+        """Accumulator footprint during calibration (fp32, unsharded)."""
+        return sum(t.bytes_at(lvl)
+                   for t, lvl in self.calib_costs(minimal=minimal))
+
+    def _calib_device_bytes(self, tap: sites_lib.TapSpec, level: str) -> int:
+        """Per-device accumulator bytes, derived from the SAME sharding
+        rule the accumulator actually uses (``dist.specs.calib_pspecs``
+        over a shape stand-in of this tap's leaves) — data axes replicate,
+        Gram leaves split over "model" when the rule shards them."""
+        if level == "none":
+            return 0
+        import math
+
+        import jax as _jax
+
+        from repro.dist import specs as specs_lib
+
+        n, d = tap.n, tap.d_in
+        leaves = {"s": _jax.ShapeDtypeStruct((n, d), "float32"),
+                  "n": _jax.ShapeDtypeStruct((n,), "float32")}
+        leaves["g" if level == "gram" else "d"] = _jax.ShapeDtypeStruct(
+            (n, d, d) if level == "gram" else (n, d), "float32")
+        if self.mesh is None:
+            pspecs = {k: None for k in leaves}
+        else:
+            pspecs = specs_lib.calib_pspecs(leaves, self.mesh)
+        total = 0
+        for k, leaf in leaves.items():
+            shards = 1
+            spec = pspecs[k]
+            for axes in (spec or ()):
+                if axes is None:
+                    continue
+                for a in ((axes,) if isinstance(axes, str) else axes):
+                    shards *= self.mesh.shape[a]
+            total += 4 * math.prod(leaf.shape) // shards
+        return total
+
+    def calib_bytes_per_device(self, *, minimal: bool = True) -> int:
+        return sum(self._calib_device_bytes(t, lvl)
+                   for t, lvl in self.calib_costs(minimal=minimal))
 
     def describe(self) -> str:
         """The dry-run table: every group, its treatment, its cost."""
@@ -146,7 +205,38 @@ class PrunePlan:
                 f"NOTE: {len(single)} group(s) refine single-device despite "
                 f"mesh= (no distributed refiner for their method): "
                 + ", ".join(single))
+        if self.cfg is not None:
+            lines.append("")
+            lines.extend(self._describe_calibration())
         return "\n".join(lines)
+
+    def _describe_calibration(self) -> list[str]:
+        """The calibration cost block: per-tap level + accumulator bytes.
+
+        The table shows the *minimal* (recipe-aware) levels; the totals
+        line also quotes the skip-aware full-Gram footprint — the
+        executor / launcher default — so the operator sizes memory off
+        whichever mode the run actually uses.
+        """
+        hdr = (f"{'calibration tap':30s} {'level':>8s} {'n x d':>12s} "
+               f"{'MiB':>8s} {'MiB/dev':>8s}")
+        lines = [hdr, "-" * len(hdr)]
+        for tap, lvl in self.calib_costs(minimal=True):
+            name = ".".join(tap.path)
+            lines.append(
+                f"{name:30s} {lvl:>8s} {f'{tap.n} x {tap.d_in}':>12s} "
+                f"{tap.bytes_at(lvl)/2**20:8.2f} "
+                f"{self._calib_device_bytes(tap, lvl)/2**20:8.2f}")
+        lines.append("-" * len(hdr))
+        minimal = self.total_calib_bytes(minimal=True)
+        skip_full = self.total_calib_bytes(minimal=False)
+        legacy = sum(t.bytes_at("gram") for t, _ in self.calib_costs())
+        lines.append(
+            f"calibration state: {skip_full/2**20:.2f} MiB skip-aware full "
+            f"(executor default) | {minimal/2**20:.2f} MiB minimal "
+            f"({self.calib_bytes_per_device(minimal=True)/2**20:.2f} "
+            f"MiB/device) | {legacy/2**20:.2f} MiB legacy every-tap")
+        return lines
 
 
 def plan_pruning(api, params, recipe: recipe_lib.PruneRecipe, *,
@@ -171,4 +261,4 @@ def plan_pruning(api, params, recipe: recipe_lib.PruneRecipe, *,
     return PrunePlan(groups=tuple(groups), recipe=recipe, mesh=mesh,
                      gram_budget_bytes=gram_budget_bytes,
                      swap_method=swap_method, chunk=chunk,
-                     row_block=row_block)
+                     row_block=row_block, cfg=api.cfg)

@@ -41,15 +41,26 @@ from repro.configs.base import ArchConfig
 
 @dataclasses.dataclass
 class GramStats:
-    """Per-instance calibration statistics for one site instance."""
+    """Per-instance calibration statistics for one site instance.
 
-    G: jnp.ndarray        # (d_in, d_in) fp32
-    count: jnp.ndarray    # () token count
-    mean: jnp.ndarray     # (d_in,)
+    ``G`` is None for moments-level statistics (``pruning.stats`` spec:
+    a dsnot-only site never pays the (d, d) Gram) — ``diag`` then carries
+    Σx² per feature, which is everything Wanda/RIA warmstarts and DSnoT's
+    feature variances need.
+    """
+
+    G: jnp.ndarray | None    # (d_in, d_in) fp32, or None (moments level)
+    count: jnp.ndarray       # () token count
+    mean: jnp.ndarray        # (d_in,)
+    diag: jnp.ndarray | None = None   # (d_in,) Σx², set when G is None
+
+    @property
+    def gram_diag(self) -> jnp.ndarray:
+        return jnp.diagonal(self.G) if self.G is not None else self.diag
 
     @property
     def ex2(self) -> jnp.ndarray:
-        return jnp.diagonal(self.G) / jnp.maximum(self.count, 1.0)
+        return self.gram_diag / jnp.maximum(self.count, 1.0)
 
     @property
     def variance(self) -> jnp.ndarray:
@@ -61,24 +72,35 @@ class GramBatch:
     """Stacked calibration statistics for ALL instances of a site group.
 
     The group-batched engine consumes these directly — one (N, d_in, d_in)
-    Gram stack per jit call instead of N separate matrices.
+    Gram stack per jit call instead of N separate matrices. As with
+    ``GramStats``, ``G`` may be None for moments-level statistics with
+    ``diag`` holding the (N, d_in) Σx² stack instead.
     """
 
-    G: jnp.ndarray        # (N, d_in, d_in) fp32
-    count: jnp.ndarray    # (N,) token counts
-    mean: jnp.ndarray     # (N, d_in)
+    G: jnp.ndarray | None    # (N, d_in, d_in) fp32, or None (moments level)
+    count: jnp.ndarray       # (N,) token counts
+    mean: jnp.ndarray        # (N, d_in)
+    diag: jnp.ndarray | None = None   # (N, d_in) Σx², set when G is None
+
+    @property
+    def gram_diag(self) -> jnp.ndarray:
+        if self.G is not None:
+            return jnp.diagonal(self.G, axis1=-2, axis2=-1)
+        return self.diag
 
     @property
     def ex2(self) -> jnp.ndarray:
-        diag = jnp.diagonal(self.G, axis1=-2, axis2=-1)
-        return diag / jnp.maximum(self.count, 1.0)[:, None]
+        return self.gram_diag / jnp.maximum(self.count, 1.0)[:, None]
 
     @property
     def variance(self) -> jnp.ndarray:
         return jnp.maximum(self.ex2 - self.mean**2, 0.0)
 
     def instance(self, i: int) -> GramStats:
-        return GramStats(G=self.G[i], count=self.count[i], mean=self.mean[i])
+        return GramStats(
+            G=None if self.G is None else self.G[i],
+            count=self.count[i], mean=self.mean[i],
+            diag=None if self.diag is None else self.diag[i])
 
 
 @dataclasses.dataclass
@@ -166,23 +188,28 @@ def _flatten_stack(w: jnp.ndarray, n_stack: int) -> jnp.ndarray:
 
 
 def _gram_batch(tap_entry: dict, n_stack: int) -> GramBatch:
-    """tap entry {g, s, n} with ``n_stack`` leading stack dims -> GramBatch.
+    """tap entry {g|d, s, n} with ``n_stack`` leading stack dims -> GramBatch.
 
     ``g``/``s``/``n`` carry the same stack dims (scan outputs), so they
     flatten symmetrically; a scalar ``n`` (shared blocks, already summed
-    over sites) broadcasts to every instance.
+    over sites) broadcasts to every instance. Moments-level entries carry
+    ``d`` (the Gram diagonal) instead of the full ``g``.
     """
-    g = _flatten_stack(tap_entry["g"], n_stack)        # (N, d, d)
+    g = (_flatten_stack(tap_entry["g"], n_stack)       # (N, d, d)
+         if "g" in tap_entry else None)
+    diag = (_flatten_stack(tap_entry["d"], n_stack)    # (N, d)
+            if "d" in tap_entry else None)
     s = _flatten_stack(tap_entry["s"], n_stack)        # (N, d)
     n = jnp.reshape(tap_entry["n"], (-1,))
-    N = g.shape[0]
-    assert s.shape[0] == N and n.shape[0] in (1, N), (
-        f"tap instance counts disagree: g={g.shape} s={s.shape} n={n.shape}")
+    N = s.shape[0]
+    assert (g is None or g.shape[0] == N) and n.shape[0] in (1, N), (
+        f"tap instance counts disagree: s={s.shape} n={n.shape}")
     count = jnp.broadcast_to(n, (N,)) if n.shape[0] == 1 else n
     return GramBatch(
         G=g,
         count=count,
         mean=s / jnp.maximum(count, 1.0)[:, None],
+        diag=diag,
     )
 
 
@@ -344,6 +371,71 @@ def site_specs(cfg: ArchConfig, params: dict) -> list[SiteSpec]:
             d_out=int(shape[n_stack]), d_in=int(shape[n_stack + 1]),
             stack_shape=tuple(int(d) for d in stack_shape)))
     return specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TapSpec:
+    """Shape-only description of one calibration tap (accumulator entry).
+
+    A tap is where calibration state actually lives: ``path`` locates the
+    entry in the model's taps tree, ``name`` is the key ``dense`` emits
+    under (the ``TapPolicy`` lookup key — encdec's cross-attention taps
+    are emitted as "wq"/... and renamed "x_wq"/... afterwards, so the two
+    can differ). ``n`` is the stacked instance count *during
+    accumulation*: zamba's shared block emits one (zero-padded) entry per
+    scanned layer even though the site group has a single instance, so
+    its accumulation-time footprint is n_layers × d², not 1 × d².
+    ``sites`` lists every site-group name fed by this tap (wq/wk/wv share
+    inputs but keep per-name taps; MoE w_gate/w_up genuinely share one).
+    """
+
+    path: tuple[str, ...]
+    name: str
+    d_in: int
+    n: int
+    sites: tuple[str, ...]
+
+    def bytes_at(self, level: str) -> int:
+        """fp32 accumulator bytes at a ``pruning.stats`` level."""
+        if level == "none":
+            return 0
+        per = (self.d_in * self.d_in if level == "gram" else self.d_in)
+        return 4 * self.n * (per + self.d_in + 1)      # g|d + s + n
+
+
+def _emission_name(tpath: tuple[str, ...]) -> str:
+    """The key ``dense`` emits a tap under (before any rename).
+
+    encdec decoder layers emit cross-attention taps under the plain
+    projection names and prefix them "x_" when merging namespaces
+    (models/encdec.decoder_layer) — policy lookups must use the emitted
+    name.
+    """
+    leaf = tpath[-1]
+    return leaf[2:] if leaf.startswith("x_") else leaf
+
+
+def tap_specs(cfg: ArchConfig, specs: list["SiteSpec"]) -> list[TapSpec]:
+    """Enumerate calibration taps with their accumulation-time shapes.
+
+    ``specs`` is the ``site_specs`` output (shape-only, eval_shape-safe).
+    Taps shared by several sites (MoE w_gate/w_up) merge into one entry.
+    """
+    by_name = {s.name: s for s in specs}
+    out: dict[tuple[str, ...], TapSpec] = {}
+    for name, _, tpath, stack in _table(cfg):
+        s = by_name[name]
+        # "sum" sites (zamba shared block) stack one tap per scanned layer
+        n = cfg.n_layers if stack == "sum" else s.n_instances
+        prev = out.get(tpath)
+        if prev is None:
+            out[tpath] = TapSpec(path=tpath, name=_emission_name(tpath),
+                                 d_in=s.d_in, n=n, sites=(name,))
+        else:
+            assert prev.d_in == s.d_in and prev.n == n, (prev, name)
+            out[tpath] = dataclasses.replace(
+                prev, sites=(*prev.sites, name))
+    return list(out.values())
 
 
 def build_mask_tree(cfg: ArchConfig, site_masks: dict[str, jnp.ndarray],

@@ -91,6 +91,17 @@ def test_gram_kernel_batched_layout(rng):
                                atol=1e-2)
 
 
+def test_gram_kernel_stacked_experts(rng):
+    """The MoE calibration layout: one Gram per expert slice."""
+    x = jnp.asarray(rng.normal(size=(3, 2, 5, 24)).astype(np.float32))
+    got = ops.gram_xtx_stacked(x, interpret=True)
+    assert got.shape == (3, 24, 24)
+    for e in range(3):
+        xe = np.asarray(x[e]).reshape(-1, 24)
+        np.testing.assert_allclose(np.asarray(got[e]), xe.T @ xe,
+                                   rtol=1e-4, atol=1e-2)
+
+
 def test_gram_update_streaming(rng):
     xs = [jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
           for _ in range(3)]

@@ -1,0 +1,238 @@
+"""Streaming calibration subsystem (pruning.stats): spec derivation,
+donated-carry accumulation vs the legacy host-summed path, recipe-aware
+tap skipping, kernel wiring, checkpoint/resume, and the mesh-sharded
+path (subprocess — needs 8 devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro import pruning
+from repro.core import masks as masks_lib
+from repro.pruning import stats as stats_lib
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _setup(arch, n_samples=4, seq_len=32, batch_size=2, seed=0):
+    cfg = configs.get_tiny(arch)
+    api = models.build(cfg)
+    params = api.init(jax.random.key(seed))
+    batches = list(pruning.calibration_batches(
+        cfg, n_samples=n_samples, seq_len=seq_len, batch_size=batch_size,
+        seed=seed))
+    return cfg, api, params, batches
+
+
+@pytest.mark.parametrize("arch", ["llama31-8b", "mixtral-8x7b", "zamba2-7b"])
+def test_streaming_matches_legacy(arch):
+    """Donated-carry streaming Grams == legacy accumulate (fp32 allclose;
+    transformer / MoE / zamba — the acceptance matrix, single device)."""
+    cfg, api, params, batches = _setup(arch)
+    legacy = pruning.accumulate(api, params, batches)
+    st = stats_lib.accumulate_stats(api, params, batches)
+    assert st.batches == len(batches)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4),
+        legacy, st.taps)
+
+
+def test_skip_rule_accumulates_nothing():
+    """A skip-rule site's tap is absent from the CalibStats tree, and a
+    dsnot-only site carries moments (d/s/n), never the full Gram."""
+    cfg, api, params, batches = _setup("llama31-8b")
+    rec = pruning.PruneRecipe(rules=(
+        pruning.SiteRule("*.mlp.w_down", skip=True),
+        pruning.SiteRule("*.attn.*", method="dsnot",
+                         pattern=masks_lib.PerRow(0.5)),
+        pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6))), t_max=5)
+    plan = pruning.plan_pruning(api, params, rec)
+    spec = plan.calib_spec(minimal=True)
+    st = stats_lib.accumulate_stats(api, params, batches, spec=spec)
+    assert "w_down" not in st.taps                      # skipped: no state
+    assert set(st.taps["wq"]) == {"d", "s", "n"}        # dsnot: moments only
+    assert set(st.taps["w_gate"]) == {"g", "s", "n"}    # sparseswaps: full G
+    # skip-aware default (minimal=False): still no w_down, but full Grams
+    st_full = stats_lib.accumulate_stats(
+        api, params, batches, spec=plan.calib_spec(minimal=False))
+    assert "w_down" not in st_full.taps
+    assert set(st_full.taps["wq"]) == {"g", "s", "n"}
+
+
+def test_executor_consumes_calibstats():
+    """Executor runs off CalibStats; minimal (moments) stats produce the
+    same masks as the full-Gram path for the same recipe."""
+    cfg, api, params, batches = _setup("llama31-8b")
+    rec = pruning.PruneRecipe(rules=(
+        pruning.SiteRule("*.mlp.w_down", skip=True),
+        pruning.SiteRule("*.attn.*", method="dsnot",
+                         pattern=masks_lib.PerRow(0.5)),
+        pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6))), t_max=5)
+    plan = pruning.plan_pruning(api, params, rec)
+    st = stats_lib.accumulate_stats(api, params, batches,
+                                    spec=plan.calib_spec(minimal=True))
+    rep_min = pruning.PruneExecutor(api, params, plan, stats=st).run()
+    rep_full = pruning.PruneExecutor(
+        api, params, plan, taps=pruning.accumulate(api, params, batches)
+    ).run()
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        rep_min.masks, rep_full.masks)
+
+
+def test_executor_rejects_insufficient_stats():
+    """Moments-level stats for a sparseswaps plan fail before refinement."""
+    cfg, api, params, batches = _setup("llama31-8b", n_samples=2)
+    rec_dsnot = pruning.PruneRecipe(pattern=masks_lib.PerRow(0.5),
+                                    method="dsnot", t_max=2)
+    plan_dsnot = pruning.plan_pruning(api, params, rec_dsnot)
+    st = stats_lib.accumulate_stats(
+        api, params, batches, spec=plan_dsnot.calib_spec(minimal=True))
+    rec_ss = pruning.PruneRecipe(pattern=masks_lib.PerRow(0.5), t_max=2)
+    plan_ss = pruning.plan_pruning(api, params, rec_ss)
+    with pytest.raises(ValueError, match="does not cover"):
+        pruning.PruneExecutor(api, params, plan_ss, stats=st)
+
+
+def test_pallas_kernel_spec_matches_jnp():
+    """kernel="pallas" (interpret on CPU) accumulates Grams allclose to
+    the plain x.T @ x path — the kernel wiring satellite, end to end."""
+    cfg, api, params, batches = _setup("llama31-8b", n_samples=2,
+                                       seq_len=16, batch_size=2)
+    ref = stats_lib.accumulate_stats(
+        api, params, batches, spec=stats_lib.CalibSpec.full(cfg,
+                                                            kernel="jnp"))
+    ker = stats_lib.accumulate_stats(
+        api, params, batches, spec=stats_lib.CalibSpec.full(cfg,
+                                                            kernel="pallas"))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-2),
+        ref.taps, ker.taps)
+
+
+def test_calib_checkpoint_resume(tmp_path):
+    """An interrupted accumulation resumes at the saved batch and matches
+    the uninterrupted run; a different spec fingerprint recomputes."""
+    cfg, api, params, batches = _setup("llama31-8b", n_samples=8)
+    spec = stats_lib.CalibSpec.full(cfg)
+    ckdir = tmp_path / "calib"
+    full = stats_lib.accumulate_stats(api, params, batches, spec=spec)
+    # run only the first 2 batches, checkpointing every batch
+    stats_lib.accumulate_stats(api, params, batches[:2], spec=spec,
+                               ckpt_dir=ckdir, checkpoint_every=1)
+    resumed = stats_lib.accumulate_stats(api, params, batches, spec=spec,
+                                         ckpt_dir=ckdir, checkpoint_every=1)
+    assert resumed.batches == len(batches)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4),
+        full.taps, resumed.taps)
+    # a different spec must NOT trust the checkpoint
+    other = stats_lib.CalibSpec(levels=(("wq", "moments"),))
+    st = stats_lib.accumulate_stats(api, params, batches[:1], spec=other,
+                                    ckpt_dir=ckdir)
+    assert st.batches == 1 and set(st.taps) == {"wq"}
+
+
+def test_spec_covers_and_fingerprint():
+    a = stats_lib.CalibSpec(levels=(("wq", "gram"), ("wk", "moments")))
+    b = stats_lib.CalibSpec(levels=(("wq", "moments"),))
+    assert a.covers(b) and not b.covers(a)
+    assert a.fingerprint() != b.fingerprint()
+    assert a.fingerprint() == stats_lib.CalibSpec(
+        levels=(("wk", "moments"), ("wq", "gram"))).fingerprint()
+    with pytest.raises(ValueError):
+        stats_lib.CalibSpec(levels=(("wq", "huge"),))
+    with pytest.raises(ValueError):
+        stats_lib.CalibSpec(levels=(), kernel="cuda")
+
+
+def test_plan_calibration_costing():
+    """describe() carries the calibration section; skip/moments levels
+    shrink the recipe-aware byte total below the legacy full-tap one."""
+    cfg, api, params, _ = _setup("llama31-8b", n_samples=2)
+    rec = pruning.PruneRecipe(rules=(
+        pruning.SiteRule("*.mlp.w_down", skip=True),
+        pruning.SiteRule("*.attn.*", method="dsnot",
+                         pattern=masks_lib.PerRow(0.5)),
+        pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6))))
+    plan = pruning.plan_pruning(
+        api, jax.eval_shape(lambda: api.init(jax.random.key(0))), rec)
+    text = plan.describe()
+    assert "calibration tap" in text and "skip-aware full" in text
+    full = sum(t.bytes_at("gram") for t, _ in plan.calib_costs())
+    assert plan.total_calib_bytes(minimal=True) < full
+    assert plan.total_calib_bytes(minimal=False) < full   # skip still saves
+
+
+def test_zamba_shared_tap_structure_under_policy():
+    """zamba's lax.cond zero branch mirrors the policy: a skipped shared
+    site leaves no shared tap entry; mamba taps survive."""
+    cfg, api, params, batches = _setup("zamba2-7b", n_samples=2)
+    rec = pruning.PruneRecipe(rules=(
+        pruning.SiteRule("shared.*", skip=True),
+        pruning.SiteRule("*", pattern=masks_lib.PerRow(0.6))), t_max=2)
+    plan = pruning.plan_pruning(api, params, rec)
+    st = stats_lib.accumulate_stats(api, params, batches,
+                                    spec=plan.calib_spec(minimal=True))
+    assert set(st.taps["shared"]) == set()                # all skipped
+    assert set(st.taps["mamba"]) == {"in_proj", "out_proj"}
+
+
+def test_mesh_sharded_matches_single_device():
+    """8-device host mesh: data-sharded accumulation (psum_gram merge)
+    matches single-device, transformer + MoE + zamba; Gram leaves land
+    column-sharded over "model" per dist.specs.calib_pspecs."""
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.configs as configs, repro.models as models
+        from repro import pruning
+        from repro.pruning import stats as stats_lib
+        from repro.launch import mesh as mesh_lib
+        from jax.sharding import PartitionSpec as P
+
+        mesh = mesh_lib.make_host_mesh(data=4, model=2)
+        for arch in ("llama31-8b", "mixtral-8x7b", "zamba2-7b"):
+            cfg = configs.get_tiny(arch)
+            api = models.build(cfg)
+            params = api.init(jax.random.key(0))
+            batches = list(pruning.calibration_batches(
+                cfg, n_samples=8, seq_len=32, batch_size=4))
+            st1 = stats_lib.accumulate_stats(api, params, batches)
+            st8 = stats_lib.accumulate_stats(api, params, batches,
+                                             mesh=mesh)
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-3),
+                st1.taps, st8.taps)
+            print(arch, "OK")
+        g = st1.taps  # llama leaf check on the last sharded run instead:
+        leaf = None
+        def find(t):
+            for v in jax.tree.leaves(t):
+                if v.ndim >= 2 and v.shape[-1] == v.shape[-2]:
+                    return v
+        leaf = find(st8.taps)
+        assert leaf.sharding.spec[-1] == "model", leaf.sharding.spec
+        print("SHARDED", leaf.sharding.spec)
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for arch in ("llama31-8b", "mixtral-8x7b", "zamba2-7b"):
+        assert f"{arch} OK" in out.stdout
+    assert "SHARDED" in out.stdout
