@@ -1,0 +1,50 @@
+"""Serving throughput: dense vs masked-dense vs packed (BENCH_serve.json).
+
+Prunes a tiny llama31-8b to 2:4 with SparseSwaps, then times batched
+prefill + greedy decode through ``repro.serve.ServeEngine`` in every
+weight format the runtime supports:
+
+* ``dense``    — unpruned baseline;
+* ``masked``   — 0/1 mask multiplied into every matmul (pre-packing
+  reference; keeps mask bytes resident on top of the dense weights);
+* ``nm24``     — 2:4 index-packed values + uint8 metadata via
+  ``kernels.spmm.spmm_nm24``;
+* ``gathered`` — per-row kept-column gather via ``spmm_gather``.
+
+Emits ``BENCH_serve.json`` at the repo root (cold_tok_s includes
+compilation; tok_s is the best warm repeat; weight_bytes is what the
+engine actually keeps resident). Run with a bigger ``--batch``/``--gen``
+for steadier numbers; on TPU the packed rows lower through the Pallas
+expand-in-VMEM kernels instead of the jnp fallback timed here.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+from pathlib import Path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31-8b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--t-max", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    from repro.launch.prune import prune
+    from repro.launch.serve import serve
+
+    with tempfile.TemporaryDirectory() as td:
+        print(f"pruning {args.arch} (tiny) to 2:4, t_max={args.t_max} ...")
+        prune(args.arch, tiny=True, pattern="2:4", method="sparseswaps",
+              t_max=args.t_max, n_calib=8, calib_seq=64,
+              out_dir=td, verbose=False)
+        serve(args.arch, tiny=True, batch=args.batch,
+              prompt_len=args.prompt_len, gen=args.gen, masks_from=td,
+              fmt="masked", bench=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,9 @@ from .sparseswaps import RefineResult, refine, refine_layer
 from .objective import layer_loss, layer_loss_direct, relative_error_reduction
 from .dsnot import dsnot
 from .sparsegpt import sparsegpt
+from .packed import (PackedWeight, from_executor_ckpt, from_report,
+                     load_mask_tree, load_masks_and_weights,
+                     load_packed_tree, pack, pack_tree, packed_bytes, unpack)
 
 __all__ = [
     "NM", "Pattern", "PerRow", "make_mask", "validate_mask",
@@ -13,4 +16,7 @@ __all__ = [
     "warmstart_mask", "RefineResult", "refine", "refine_layer",
     "layer_loss", "layer_loss_direct", "relative_error_reduction",
     "dsnot", "sparsegpt",
+    "PackedWeight", "from_executor_ckpt", "from_report", "load_mask_tree",
+    "load_masks_and_weights", "load_packed_tree", "pack", "pack_tree",
+    "packed_bytes", "unpack",
 ]

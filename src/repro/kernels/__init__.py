@@ -2,8 +2,10 @@
 
 * ``swap_argmin`` — fused ΔL + running argmin over Gram tiles (paper Eq. 5).
 * ``gram``        — fp32-accumulating Xᵀ X for calibration (paper §2.1.2).
+* ``spmm``        — packed sparse-weight matmul (nm24 / gathered) for the
+  serving runtime (``repro.serve``).
 
 ``ops`` holds the jit'd public wrappers (padding + CPU fallback);
 ``ref`` holds the pure-jnp oracles the kernels are tested against.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, spmm  # noqa: F401

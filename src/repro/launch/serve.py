@@ -1,51 +1,124 @@
-"""Serving launcher: batched prefill + decode with (optionally) pruned masks.
+"""Serving launcher: batched prefill + decode on dense or packed weights.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama31-8b --tiny \
         --batch 4 --prompt-len 32 --gen 16
 
-Demonstrates the full serving path the decode_* dry-run cells lower:
-prefill fills sharded KV/SSM caches, decode steps one token at a time.
-``--masks-from`` serves the sparse model (masked matmuls — on real
-hardware these dispatch to 2:4-sparse or gathered kernels; here masking
-keeps the arithmetic faithful).
+Sparse serving loads real pruning artifacts and packs them once at
+startup (``repro.serve.ServeEngine``):
+
+    # prune, checkpointing masks under out/prune_ckpt/groups/<site>/
+    python -m repro.launch.prune --arch llama31-8b --tiny \
+        --sparsity 2:4 --out-dir out
+    # serve the refined masks from the packed 2:4 format
+    python -m repro.launch.serve --arch llama31-8b --tiny \
+        --masks-from out --format nm24
+
+``--masks-from`` accepts any pruning-run artifact: an executor
+checkpoint dir (``groups/<site>/step_*``), a masks-tree checkpoint, or
+the launcher ``--out-dir`` root. ``--format`` picks the weight
+representation (dense / masked / nm24 / gathered), ``--kernel`` the
+spmm path (auto = Pallas on TPU, jnp elsewhere). ``--bench`` times
+dense vs masked-dense vs packed and writes ``BENCH_serve.json`` rows
+(tok/s + resident weight bytes) at the repo root.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 import repro.configs as configs
 import repro.models as models
-from repro import ckpt
 from repro.data import synthetic
 from repro.launch import mesh as mesh_lib
-from repro.train import steps as steps_lib
+from repro.serve import ServeEngine, bench_rows
+
+BENCH_OUT = Path(__file__).resolve().parents[3] / "BENCH_serve.json"
 
 
 def serve(arch: str, *, tiny: bool = True, batch: int = 4,
-          prompt_len: int = 32, gen: int = 16, masks=None, seed: int = 0,
+          prompt_len: int = 32, gen: int = 16, masks=None,
+          masks_from: str | None = None, fmt: str | None = None,
+          kernel: str = "auto", mesh: str | None = None, seed: int = 0,
+          bench: bool = False, bench_out: Path | None = None,
           verbose: bool = True) -> dict:
+    """Serve a batch of prompts; returns tokens + timing (+ bench rows).
+
+    ``masks``/``masks_from`` feed the sparse formats. ``fmt=None`` picks
+    the faithful default — "masked" when a mask source is given, "dense"
+    otherwise; an explicit "dense" is honored either way (the unpruned
+    baseline). ``mesh``: None, "host", or "production".
+    """
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
     params = api.init(jax.random.key(seed))
-    mesh = mesh_lib.make_host_mesh()
+    mesh_obj = None
+    if mesh:
+        mesh_obj = (mesh_lib.make_production_mesh() if mesh == "production"
+                    else mesh_lib.make_host_mesh())
 
     corpus = synthetic.CorpusConfig(cfg.vocab_size, seed=seed)
     pipe = synthetic.DataPipeline(corpus, batch, prompt_len, split="val")
     prompt = synthetic.with_modality(pipe.get(0), cfg, jax.random.key(seed))
 
-    with mesh_lib.activate(mesh, cfg):
-        t0 = time.time()
-        toks = steps_lib.greedy_decode(api, params, prompt, gen, masks=masks)
-        dt = time.time() - t0
+    mask_src = masks_from if masks_from is not None else masks
+    if fmt is None:
+        fmt = "masked" if mask_src is not None else "dense"
+    # resolve the mask source ONCE — a checkpoint may also carry updated
+    # weights (sparsegpt); every engine below reuses the same trees.
+    # ``params`` stays the untouched dense baseline.
+    from repro.core import packed as packed_lib
+    params_srv = params
+    if isinstance(mask_src, (str, Path)):
+        mask_src, params_srv = packed_lib.load_masks_and_weights(
+            cfg, params, mask_src)
+
+    engine = ServeEngine(api, params if fmt == "dense" else params_srv,
+                         masks=mask_src, fmt=fmt, kernel=kernel,
+                         mesh=mesh_obj)
+    res = engine.generate(prompt, gen)
+    out = {"tokens": res.tokens, "wall_s": res.prefill_s + res.decode_s,
+           "tok_s": res.tok_s, "weight_bytes": engine.weight_bytes(),
+           "format": fmt}
     if verbose:
-        print(f"{arch}: served {batch} requests, {gen} new tokens each "
-              f"in {dt:.2f}s ({batch*gen/dt:.1f} tok/s)")
-        print("sample output ids:", toks[0][:12].tolist())
-    return {"tokens": toks, "wall_s": dt}
+        print(f"{arch}: served {batch} requests, {gen} new tokens each in "
+              f"{out['wall_s']:.2f}s ({res.tok_s:.1f} decode tok/s, "
+              f"format={fmt}, {out['weight_bytes']/2**20:.1f} MiB weights)")
+        print("sample output ids:", res.tokens[0][:12].tolist())
+
+    if bench:
+        formats = ["dense"]
+        if mask_src is not None:
+            formats += ["masked", "nm24", "gathered"]
+        rows = bench_rows(api, params, mask_src, prompt, gen,
+                          formats=_servable(formats, api, params_srv,
+                                            mask_src),
+                          kernel=kernel, mesh=mesh_obj,
+                          masked_params=params_srv)
+        doc = {"arch": arch, "batch": batch, "prompt_len": prompt_len,
+               "gen": gen, "devices": len(jax.devices()), "rows": rows}
+        path = bench_out or BENCH_OUT
+        path.write_text(json.dumps(doc, indent=1))
+        out["bench"] = rows
+        if verbose:
+            for r in rows:
+                print(f"  {r['variant']:8s} {r['tok_s']:8.1f} tok/s  "
+                      f"{r['weight_bytes']/2**20:8.2f} MiB")
+            print(f"wrote {path}")
+    return out
+
+
+def _servable(formats, api, params, mask_src) -> list:
+    """Drop packed formats the mask source cannot represent (e.g. nm24
+    for an unstructured per-row mask) instead of failing the bench.
+    Representability is a mask property — no weights are packed here."""
+    from repro.core import packed as packed_lib
+    masks = mask_src.masks if hasattr(mask_src, "masks") else mask_src
+    return [fmt for fmt in formats
+            if fmt not in ("nm24", "gathered")
+            or packed_lib.representable(api.cfg, masks, fmt)]
 
 
 def main(argv=None):
@@ -55,17 +128,28 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--masks-from", default=None)
+    ap.add_argument("--masks-from", default=None,
+                    help="pruning artifact dir: executor ckpt "
+                         "(groups/<site>/), masks-tree ckpt, or --out-dir "
+                         "root")
+    ap.add_argument("--format", default=None,
+                    choices=["dense", "masked", "nm24", "gathered"],
+                    help="weight representation (default: masked when "
+                         "--masks-from is given, dense otherwise; an "
+                         "explicit dense serves the unpruned baseline)")
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="spmm kernel for packed formats")
+    ap.add_argument("--mesh", default=None, choices=["host", "production"])
+    ap.add_argument("--bench", action="store_true",
+                    help="time dense vs masked vs packed; write "
+                         "BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    masks = None
-    if args.masks_from:
-        latest = ckpt.latest_valid(args.masks_from)
-        raise SystemExit("--masks-from requires a mask tree; use the python "
-                         "API (examples/serve_sparse.py)") if latest is None \
-            else None
     serve(args.arch, tiny=args.tiny, batch=args.batch,
-          prompt_len=args.prompt_len, gen=args.gen, seed=args.seed)
+          prompt_len=args.prompt_len, gen=args.gen,
+          masks_from=args.masks_from, fmt=args.format, kernel=args.kernel,
+          mesh=args.mesh, seed=args.seed, bench=args.bench)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed import PackedWeight
+
 Params = dict
 # name -> {"g": (d_in, d_in) gram, "s": (d_in,) feature sums, "n": () count}
 # g feeds SparseSwaps/Wanda/RIA/SparseGPT; s/n give DSnoT its feature
@@ -133,6 +135,77 @@ def zero_tap_entry(name: str, d: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# matmul policy (pluggable serving execution path)
+# ---------------------------------------------------------------------------
+
+class MatmulPolicy:
+    """Decides how a prunable linear *executes*, mirroring ``TapPolicy``.
+
+    ``dense`` (and the MoE expert einsums) route every weight
+    application through the active policy instead of hard-coding
+    ``x @ (mask ⊙ w)ᵀ``, so the same model code serves three regimes
+    without per-model changes:
+
+    * dense / masked-dense — the default below (training, calibration,
+      reference serving);
+    * packed — when a param leaf is a ``core.packed.PackedWeight`` the
+      policy's ``packed_matmul`` runs it through the sparse kernels
+      (``kernels.spmm``); ``kernel`` selects pallas/jnp (``"auto"`` =
+      Pallas on TPU, take-along-columns jnp elsewhere).
+
+    Policies are consulted at *trace* time (install with
+    ``use_matmul_policy`` around the jit; re-jit per policy), exactly
+    like tap policies.
+    """
+
+    kernel: str = "auto"
+
+    def matmul(self, x: jnp.ndarray, w: jnp.ndarray,
+               mask: jnp.ndarray | None) -> jnp.ndarray:
+        if mask is not None:
+            w = w * mask.astype(w.dtype)
+        return x @ w.T.astype(x.dtype)
+
+    def packed_matmul(self, x: jnp.ndarray, pw: PackedWeight) -> jnp.ndarray:
+        from repro.kernels import spmm
+        return spmm.spmm(x, pw, kernel=self.kernel)
+
+    def packed_matmul_stacked(self, x: jnp.ndarray,
+                              pw: PackedWeight) -> jnp.ndarray:
+        """Per-instance variant for stacked leaves (MoE experts)."""
+        from repro.kernels import spmm
+        return spmm.spmm_stacked(x, pw, kernel=self.kernel)
+
+
+class PackedMatmulPolicy(MatmulPolicy):
+    """A ``MatmulPolicy`` with an explicit kernel choice for packed leaves."""
+
+    def __init__(self, kernel: str = "auto"):
+        self.kernel = kernel
+
+
+DEFAULT_MATMUL_POLICY = MatmulPolicy()
+_matmul_policy: MatmulPolicy = DEFAULT_MATMUL_POLICY
+
+
+def matmul_policy() -> MatmulPolicy:
+    """The policy currently governing prunable-linear execution."""
+    return _matmul_policy
+
+
+@contextlib.contextmanager
+def use_matmul_policy(policy: MatmulPolicy):
+    """Install ``policy`` for the dynamic (trace-time) extent of the block."""
+    global _matmul_policy
+    prev = _matmul_policy
+    _matmul_policy = policy
+    try:
+        yield
+    finally:
+        _matmul_policy = prev
+
+
+# ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
 
@@ -161,12 +234,21 @@ def dense(
     When ``taps`` is a dict and ``tap`` a name, accumulates the
     statistics the active ``TapPolicy`` selects for x into taps[tap]
     (created on first use; may be skipped entirely by the policy).
+
+    Execution is delegated to the active ``MatmulPolicy``: a
+    ``PackedWeight`` leaf (serving a packed sparse export) dispatches to
+    the spmm kernels — ``mask`` must then be ``None``, the mask is baked
+    into the packing.
     """
     if taps is not None and tap is not None:
         emit_tap(taps, tap, x)
-    if mask is not None:
-        w = w * mask.astype(w.dtype)
-    return x @ w.T.astype(x.dtype)
+    pol = _matmul_policy
+    if isinstance(w, PackedWeight):
+        if mask is not None:
+            raise ValueError("PackedWeight already encodes its mask; "
+                             "serve packed params with masks=None")
+        return pol.packed_matmul(x, w)
+    return pol.matmul(x, w, mask)
 
 
 # ---------------------------------------------------------------------------

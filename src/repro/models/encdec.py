@@ -176,8 +176,15 @@ def prefill(params, batch, cfg, cache: EncDecCache, *, masks=None):
     """Encode src + run the target prefix, filling both cache kinds."""
     enc_out, _ = encode(params, batch["src"], cfg, masks=masks)
     m = None if masks is None else masks["dec_layers"]
-    cross = jax.vmap(lambda pl_: attn.precompute_cross_kv(pl_["xattn"], enc_out, cfg))(
-        params["dec_layers"])
+    # the cross-KV precompute must see the xattn wk/wv masks too — it is
+    # the same projection decoder_layer would otherwise run masked
+    mx = None if m is None else m.get("xattn")
+    if mx is None:
+        cross = jax.vmap(lambda pl_: attn.precompute_cross_kv(
+            pl_["xattn"], enc_out, cfg))(params["dec_layers"])
+    else:
+        cross = jax.vmap(lambda pl_, ml_: attn.precompute_cross_kv(
+            pl_["xattn"], enc_out, cfg, masks=ml_))(params["dec_layers"], mx)
     tokens = batch["tokens"]
     x = jnp.take(params["embed"], tokens, axis=0)
     positions = jnp.arange(tokens.shape[1])

@@ -124,11 +124,8 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
         _tap_add(taps, "moe_w_up", _moe_tap_entry(pol, f_up, b32, n_e))
 
     act = ACTS[cfg.act]
-    wg = _masked(p["w_gate"], m("w_gate"))
-    wu = _masked(p["w_up"], m("w_up"))
-    wd = _masked(p["w_down"], m("w_down"))
-    up = jnp.einsum("bnecd,efd->bnecf", buf, wu.astype(buf.dtype))
-    gate = jnp.einsum("bnecd,efd->bnecf", buf, wg.astype(buf.dtype))
+    up = _expert_mm(buf, p["w_up"], m("w_up"))
+    gate = _expert_mm(buf, p["w_gate"], m("w_gate"))
     h = act(gate) * up
     # seq-sharded groups already parallelize expert compute over the model
     # axis via tokens — the f dim must NOT also map to "model" (one mesh
@@ -138,7 +135,7 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
     if f_down:
         h32 = h.astype(jnp.float32)
         _tap_add(taps, "moe_w_down", _moe_tap_entry(pol, f_down, h32, n_e))
-    out_buf = jnp.einsum("bnecf,edf->bnecd", h, wd.astype(h.dtype))
+    out_buf = _expert_mm(h, p["w_down"], m("w_down"))
 
     out = jax.vmap(
         lambda ob, de, fg: _combine_group(ob.reshape(e * cap, d), de, fg,
@@ -159,6 +156,27 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
 
 def _masked(w, mask):
     return w if mask is None else w * mask.astype(w.dtype)
+
+
+def _expert_mm(x5, w, mask):
+    """Per-expert contraction: (B, ng, E, C, d) · (E, f, d) -> (B, ng, E, C, f).
+
+    The MoE analogue of ``common.dense``'s execution dispatch: a
+    ``PackedWeight`` leaf (stacked on the expert dim) routes through the
+    active ``MatmulPolicy``'s stacked spmm; dense/masked weights stay on
+    the fused einsum.
+    """
+    if isinstance(w, common.PackedWeight):
+        if mask is not None:
+            raise ValueError("PackedWeight already encodes its mask; "
+                             "serve packed params with masks=None")
+        B, ng, e, cap, d = x5.shape
+        xe = x5.transpose(2, 0, 1, 3, 4).reshape(e, B * ng * cap, d)
+        ye = common.matmul_policy().packed_matmul_stacked(xe, w)
+        ye = ye.reshape(e, B, ng, cap, -1)
+        return ye.transpose(1, 2, 0, 3, 4)
+    w = _masked(w, mask)
+    return jnp.einsum("bnecd,efd->bnecf", x5, w.astype(x5.dtype))
 
 
 def _tap_add(taps, name, ent):

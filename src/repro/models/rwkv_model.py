@@ -49,12 +49,15 @@ def rwkv_layer(p, x, cfg, *, masks=None, want_taps=False,
                cache=None):
     """One RWKV6 layer (train/prefill). Returns (x, taps, cache')."""
     taps = {} if want_taps else None
+    # the mask tree mirrors the param tree, so the per-layer slice nests
+    # the prunable leaves under "tm" exactly like ``p`` does
+    mm = None if masks is None else masks.get("tm")
     h = _apply_norm(p["ln1"], x, cfg)
-    a, s_fin, x_tm_last = rwkv6.time_mix(p["tm"], h, cfg, masks=masks, taps=taps,
+    a, s_fin, x_tm_last = rwkv6.time_mix(p["tm"], h, cfg, masks=mm, taps=taps,
                                          cache=cache)
     x = x + a
     h2 = _apply_norm(p["ln2"], x, cfg)
-    f, x_cm_last = rwkv6.channel_mix(p["tm"], h2, cfg, masks=masks, taps=taps,
+    f, x_cm_last = rwkv6.channel_mix(p["tm"], h2, cfg, masks=mm, taps=taps,
                                      x_prev=None if cache is None else cache.x_cm)
     x = x + f
     x = constrain(x, "batch", "seq", None)
@@ -126,12 +129,13 @@ def decode_step(params, token, cfg, cache, *, masks=None):
     def body(carry, xs):
         pl_, ml_, s_, xtm_, xcm_ = xs
         lc = rwkv6.RWKVCache(s=s_, x_tm=xtm_, x_cm=xcm_)
+        mm = None if ml_ is None else ml_.get("tm")
         xc = carry
         h = _apply_norm(pl_["ln1"], xc, cfg)
-        a, s_new, x_tm_last = rwkv6.time_mix_decode(pl_["tm"], h, lc, cfg, masks=ml_)
+        a, s_new, x_tm_last = rwkv6.time_mix_decode(pl_["tm"], h, lc, cfg, masks=mm)
         xc = xc + a
         h2 = _apply_norm(pl_["ln2"], xc, cfg)
-        f, x_cm_last = rwkv6.channel_mix(pl_["tm"], h2, cfg, masks=ml_,
+        f, x_cm_last = rwkv6.channel_mix(pl_["tm"], h2, cfg, masks=mm,
                                          x_prev=lc.x_cm)
         xc = xc + f
         return xc, (s_new, x_tm_last, x_cm_last)

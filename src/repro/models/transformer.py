@@ -322,10 +322,18 @@ def prefill(params, batch, cfg, cache: DecodeCache, *, masks=None):
     positions = jnp.arange(S)
     if cfg.cross_attn_every:
         params = dict(params)
-        params["_img_states"] = batch["img"].astype(x.dtype)
-        # precompute per-group cross KV
-        ck = jax.vmap(lambda pc: attn.precompute_cross_kv(
-            pc["attn"], batch["img"].astype(x.dtype), cfg))(params["cross_layers"])
+        img = batch["img"].astype(x.dtype)
+        params["_img_states"] = img
+        # precompute per-group cross KV; the wk/wv masks apply here — it
+        # is the same projection cross_layer would otherwise run masked
+        mc = None if masks is None or "cross_layers" not in masks \
+            else masks["cross_layers"].get("attn")
+        if mc is None:
+            ck = jax.vmap(lambda pc: attn.precompute_cross_kv(
+                pc["attn"], img, cfg))(params["cross_layers"])
+        else:
+            ck = jax.vmap(lambda pc, ml_: attn.precompute_cross_kv(
+                pc["attn"], img, cfg, masks=ml_))(params["cross_layers"], mc)
         params["_cross_kv"] = ck
         x, new_kv, _, _ = _scan_layers(params, x, positions, cfg, masks=masks,
                                        want_taps=False, mode="prefill",

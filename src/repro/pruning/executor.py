@@ -239,6 +239,7 @@ class PruneExecutor:
         self.ckpt_dir = Path(ckpt_dir) if ckpt_dir is not None else None
         self.callback = callback or PruneCallback()
         self.engine_mode = engine_mode
+        self._last_report: PruneReport | None = None
 
     # -- group checkpointing ------------------------------------------------
 
@@ -392,5 +393,54 @@ class PruneExecutor:
             updated_params=new_params,
             plan=plan,
         )
+        self._last_report = report
         self.callback.on_run_done(report)
         return report
+
+    # -- serving export -----------------------------------------------------
+
+    def export_packed(self, out_dir: str | Path, fmt: str = "nm24",
+                      *, report: "PruneReport | None" = None) -> Path:
+        """Export the refined masks as a servable packed checkpoint.
+
+        Packs the executor's weights under the last ``run()``'s masks
+        (or an explicit ``report``) into ``core.packed`` format ``fmt``
+        and checkpoints the packed values/idx trees atomically under
+        ``out_dir`` — the artifact ``repro.serve.ServeEngine`` (and
+        ``launch/serve.py --masks-from``) consumes without re-packing.
+        SparseGPT runs export their *updated* weights.
+        """
+        from repro.core import packed as packed_lib
+
+        report = report if report is not None else self._last_report
+        if report is None:
+            raise ValueError("nothing to export — call run() first or "
+                             "pass report=")
+        params = (report.updated_params
+                  if report.updated_params is not None else self.params)
+        tree = packed_lib.pack_tree(self.api.cfg, params, report.masks, fmt)
+        vals, idx, meta = {}, {}, {}
+        flat = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, packed_lib.PackedWeight))[0]
+        for path, leaf in flat:
+            if not isinstance(leaf, packed_lib.PackedWeight):
+                continue
+            name = ".".join(str(p.key) for p in path)
+            vals[name] = leaf.values
+            idx[name] = leaf.idx
+            meta[name] = {"fmt": leaf.fmt, "d_in": leaf.d_in,
+                          "n": leaf.n, "m": leaf.m,
+                          "dtype": str(leaf.values.dtype)}
+        out = Path(out_dir)
+        ckpt.save(out / "packed", 0, {"values": vals, "idx": idx},
+                  extra={"format": fmt, "sites": meta})
+        # masks ride along so masked-dense serving (and re-packing into
+        # the other format) works from the same artifact
+        ckpt.save(out / "masks", 0, report.masks)
+        if report.updated_params is not None:
+            # sparsegpt updates the surviving weights — the mask-based
+            # serving paths need them too, not just the packed dump
+            upd = {name: sites_lib._get(params, name.split("."))
+                   for name in meta}
+            ckpt.save(out / "weights", 0, upd)
+        return out

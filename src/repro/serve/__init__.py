@@ -1,0 +1,4 @@
+"""Sparse serving runtime: packed-weight batched prefill/decode."""
+from .engine import FORMATS, ServeEngine, ServeResult, bench_rows
+
+__all__ = ["FORMATS", "ServeEngine", "ServeResult", "bench_rows"]

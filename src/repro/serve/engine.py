@@ -1,0 +1,248 @@
+"""Batched sparse serving engine: pack once, serve from packed weights.
+
+The serving counterpart of the pruning pipeline. ``ServeEngine`` takes a
+model + a mask source (an in-memory tree, a ``PruneReport``, or any
+pruning-run checkpoint directory — executor group checkpoints included)
+and serves batched prefill + greedy decode in one of four weight
+formats:
+
+* ``dense``    — the unpruned baseline;
+* ``masked``   — dense weights multiplied by 0/1 masks every matmul (the
+  pre-packing reference path; arithmetic-faithful, zero bytes saved);
+* ``nm24``     — 2:4/N:M index-packed values + uint8 metadata through
+  ``kernels.spmm.spmm_nm24``;
+* ``gathered`` — per-row kept-column gather through ``spmm_gather``.
+
+Packing happens ONCE at construction (``core.packed.pack_tree``); the
+packed leaves are ordinary pytree nodes, so the models' scan-over-layers
+and ``dist.specs`` mesh sharding consume them unchanged — on a mesh the
+packed values/idx shard exactly like the dense weight they replace.
+Kernel selection mirrors the rest of the repo: ``"auto"`` is Pallas on
+TPU and the take-along-columns jnp path elsewhere (the Pallas kernels
+run under interpret off-TPU when forced).
+
+``bench_rows`` emits the ``BENCH_serve.json`` rows the launcher writes:
+dense vs masked-dense vs packed tok/s plus resident weight bytes.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packed as packed_lib
+from repro.dist import specs as specs_lib
+from repro.models import ModelApi, common
+
+FORMATS = ("dense", "masked", "nm24", "gathered")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One timed generate() call."""
+
+    tokens: jnp.ndarray        # (B, n_new) int32
+    prefill_s: float
+    decode_s: float
+    n_new: int
+    batch: int
+
+    @property
+    def tok_s(self) -> float:
+        """Decode throughput (the serving steady state).
+
+        With a single generated token there are zero decode steps, so
+        fall back to end-to-end throughput instead of dividing the one
+        prefill-produced token by an empty loop's microseconds.
+        """
+        steps = self.n_new - 1
+        if steps <= 0:
+            return self.batch * self.n_new / max(
+                self.prefill_s + self.decode_s, 1e-9)
+        return self.batch * steps / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    """Pack once at startup, then serve batched prefill/decode.
+
+    Args:
+        api/params: the model to serve (dense weights).
+        masks: mask source for the sparse formats — a masks pytree, a
+            ``PruneReport``, or a checkpoint directory (executor
+            ``groups/``, a masks-tree checkpoint, or a launcher
+            ``--out-dir`` root; see ``core.packed.load_mask_tree``).
+            Required for ``masked``/``nm24``/``gathered``.
+        fmt: one of ``FORMATS``.
+        kernel: spmm kernel for packed formats ("auto"/"pallas"/"jnp").
+        mesh: optional ``jax.sharding.Mesh`` — weights (packed or not)
+            are placed with ``dist.specs.param_pspecs``-style sharding
+            and the model's logical-axis rules are activated around
+            every call.
+    """
+
+    def __init__(self, api: ModelApi, params: dict, *, masks=None,
+                 fmt: str = "masked", kernel: str = "auto", mesh=None):
+        if fmt not in FORMATS:
+            raise ValueError(f"unknown serve format {fmt!r} "
+                             f"(want one of {FORMATS})")
+        self.api = api
+        self.cfg = api.cfg
+        self.fmt = fmt
+        self.kernel = kernel
+        self.mesh = mesh
+        if fmt == "dense":
+            masks = None           # baseline: original weights, no masks
+        else:
+            masks, params = self._resolve_masks(params, masks)
+            if masks is None:
+                raise ValueError(f"format {fmt!r} needs masks "
+                                 "(tree, PruneReport, or checkpoint dir)")
+
+        t0 = time.time()
+        if fmt in ("nm24", "gathered"):
+            self.params = packed_lib.pack_tree(self.cfg, params, masks, fmt)
+            self.masks = None
+        else:
+            self.params = params
+            self.masks = masks if fmt == "masked" else None
+        self.pack_s = time.time() - t0
+        self._policy = common.PackedMatmulPolicy(kernel)
+        self._steps = None              # (prefill, decode) jits, built once
+
+        if mesh is not None:
+            pspecs = specs_lib.param_pspecs(self.cfg, self.params, mesh)
+            self.params = jax.device_put(
+                self.params, specs_lib.named(mesh, pspecs))
+            if self.masks is not None:
+                mspecs = specs_lib.param_pspecs(self.cfg, self.masks, mesh)
+                self.masks = jax.device_put(
+                    self.masks, specs_lib.named(mesh, mspecs))
+
+    def _resolve_masks(self, params, masks):
+        """-> (masks tree | None, params) — a checkpoint source may also
+        carry updated weights (sparsegpt), a report always does."""
+        if masks is None or isinstance(masks, dict):
+            return masks, params
+        if isinstance(masks, (str, Path)):
+            return packed_lib.load_masks_and_weights(self.cfg, params, masks)
+        if hasattr(masks, "masks"):           # PruneReport
+            if getattr(masks, "updated_params", None) is not None:
+                params = masks.updated_params
+            return masks.masks, params
+        raise TypeError(f"cannot interpret masks source {type(masks)!r}")
+
+    @classmethod
+    def from_executor_ckpt(cls, api: ModelApi, params: dict,
+                           ckpt_dir: str | Path, **kw) -> "ServeEngine":
+        """Serve the masks a (possibly still-running) executor published."""
+        return cls(api, params, masks=ckpt_dir, **kw)
+
+    # -- accounting ---------------------------------------------------------
+
+    def weight_bytes(self) -> int:
+        """Resident weight bytes this engine serves from (masks included:
+        the masked-dense path genuinely keeps them in memory)."""
+        total = packed_lib.packed_bytes(self.params)
+        if self.masks is not None:
+            total += sum(int(l.nbytes) for l in jax.tree.leaves(self.masks))
+        return total
+
+    # -- serving ------------------------------------------------------------
+
+    def _ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.launch import mesh as mesh_lib
+        return mesh_lib.activate(self.mesh, self.cfg)
+
+    def _serve_steps(self):
+        if self._steps is None:
+            from repro.train import steps as steps_lib
+            self._steps = steps_lib.make_serve_steps(self.api,
+                                                     masks=self.masks)
+        return self._steps
+
+    def _greedy_loop(self, prompt: dict, n_new: int, *,
+                     want_logits: bool = False):
+        """The one prefill → argmax → decode loop both surfaces consume.
+
+        The active ``MatmulPolicy`` is installed around the traced calls,
+        so packed leaves lower through the spmm kernels inside the same
+        jitted prefill/decode programs the dense path uses. Returns
+        (tokens (B, n_new), last-step logits (n_new, B, V) fp32 or None,
+        prefill_s, decode_s). The logits trace is only accumulated when
+        asked — the casts/stack must not sit inside timed decode.
+        """
+        B, S = prompt["tokens"].shape
+        with self._ctx(), common.use_matmul_policy(self._policy):
+            if self.mesh is not None:
+                prompt = jax.device_put(prompt, specs_lib.named(
+                    self.mesh, specs_lib.batch_pspecs(self.cfg, prompt,
+                                                      self.mesh)))
+            cache = self.api.init_cache(self.params, B, S + n_new)
+            prefill, decode = self._serve_steps()
+            steps = [] if want_logits else None
+            t0 = time.time()
+            logits, cache = prefill(self.params, prompt, cache)
+            if want_logits:
+                steps.append(logits[:, -1].astype(jnp.float32))
+            toks = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+            jax.block_until_ready(toks[-1])
+            t1 = time.time()
+            for _ in range(n_new - 1):
+                logits, cache = decode(self.params, toks[-1][:, None], cache)
+                if want_logits:
+                    steps.append(logits[:, -1].astype(jnp.float32))
+                toks.append(jnp.argmax(logits[:, -1], axis=-1)
+                            .astype(jnp.int32))
+            out = jnp.stack(toks, axis=1)
+            jax.block_until_ready(out)
+            t2 = time.time()
+        trace = jnp.stack(steps, axis=0) if want_logits else None
+        return out, trace, t1 - t0, t2 - t1
+
+    def generate(self, prompt: dict, n_new: int) -> ServeResult:
+        """Batched prefill + ``n_new`` greedy decode steps, timed."""
+        tokens, _, prefill_s, decode_s = self._greedy_loop(prompt, n_new)
+        return ServeResult(tokens=tokens, prefill_s=prefill_s,
+                           decode_s=decode_s, n_new=n_new,
+                           batch=tokens.shape[0])
+
+    def logits_trace(self, prompt: dict, n_new: int) -> jnp.ndarray:
+        """(n_new, B, vocab) greedy logits — the parity-test surface."""
+        return self._greedy_loop(prompt, n_new, want_logits=True)[1]
+
+
+def bench_rows(api: ModelApi, params: dict, masks, prompt: dict,
+               n_new: int, *, formats=("dense", "masked", "nm24"),
+               kernel: str = "auto", mesh=None, repeats: int = 2,
+               masked_params: dict | None = None) -> list:
+    """Dense vs masked-dense vs packed serving rows for BENCH_serve.json.
+
+    Each row: format, kernel, decode tok/s (best warm repeat), prefill
+    seconds, resident weight bytes, and pack time. The first generate
+    pays compilation (``cold_tok_s``). ``masked_params`` are the weights
+    the masks belong to when they differ from the dense baseline
+    (sparsegpt updates); the dense row always serves ``params``.
+    """
+    rows = []
+    for fmt in formats:
+        p = params if fmt == "dense" or masked_params is None \
+            else masked_params
+        eng = ServeEngine(api, p, masks=masks if fmt != "dense"
+                          else None, fmt=fmt, kernel=kernel, mesh=mesh)
+        results = [eng.generate(prompt, n_new) for _ in range(repeats + 1)]
+        rows.append({
+            "variant": fmt,
+            "kernel": kernel if fmt in ("nm24", "gathered") else "dense",
+            "cold_tok_s": results[0].tok_s,
+            "tok_s": max(r.tok_s for r in results[1:]),
+            "prefill_s": min(r.prefill_s for r in results[1:]),
+            "weight_bytes": eng.weight_bytes(),
+            "pack_s": eng.pack_s,
+        })
+    return rows
