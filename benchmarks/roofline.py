@@ -1,9 +1,14 @@
 """Roofline table: reads the dry-run artifacts (results/dryrun/*) and
-prints the per-(arch x shape x mesh) three-term roofline (DESIGN §7).
+prints the per-(arch x shape x mesh) three-term roofline (DESIGN §7),
+plus the analytic swap-search roofline — bytes moved and FLOPs per
+ACCEPTED swap for the per-iteration argmin path vs the fused top-k
+kernel (``kernels/swap_topk``). The headline metric is G HBM re-reads
+per accepted swap: the argmin path streams the whole d_in² Gram once
+per swap; the k-swap path streams it once per ~A accepted swaps (A =
+accepts/pass) and pays O(R·d) column gathers per accept instead.
 
 Run ``python -m repro.launch.dryrun`` first (or use the committed
-artifacts). This is the §Roofline deliverable renderer; EXPERIMENTS.md
-embeds its output.
+artifacts) for the mesh tables; the swap-search table is closed-form.
 """
 from __future__ import annotations
 
@@ -12,6 +17,65 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 DRYRUN = ROOT / "results" / "dryrun"
+
+
+def swap_search_rows(shapes=(4096, 14336, 24576), *, row_block=16, k=8,
+                     accepts_per_pass=4.0):
+    """Closed-form bytes/FLOPs per ACCEPTED swap, argmin vs fused top-k.
+
+    One search pass over a row block of RB rows streams the whole Gram
+    once from HBM (``d²·4`` bytes — the kernels revisit G tiles per row
+    block) and spends ``≈3·RB·d²`` ΔL flops. The argmin path accepts at
+    most ONE swap per row per pass; the fused top-k path accepts up to k
+    (``accepts_per_pass`` ≈ A, the measured average on the bench
+    config), so the same G stream is amortized over A× more swaps. Every
+    accepted swap additionally gathers ~3 G columns (the commit's column
+    re-search + the Eq. 6 rank-1 update): ``3·d·4`` bytes and ``~6·d``
+    flops per swap — negligible next to the d²/RB search share at LLM
+    widths. ``g_reads_per_swap`` (full-G HBM streams per accepted swap,
+    per row block) is the headline: 1/RB vs 1/(A·RB).
+    """
+    rows = []
+    a = min(accepts_per_pass, k)
+    for d in shapes:
+        g_bytes = 4 * d * d
+        search_flops_row = 3 * d * d          # per row, per pass
+        argmin = {
+            "path": "argmin", "d_in": d, "row_block": row_block,
+            "g_reads_per_swap": 1.0 / row_block,
+            "hbm_bytes_per_swap": g_bytes / row_block + 2 * d * 4,
+            "flops_per_swap": search_flops_row,
+        }
+        topk = {
+            "path": f"topk(k={k})", "d_in": d, "row_block": row_block,
+            "g_reads_per_swap": 1.0 / (a * row_block),
+            "hbm_bytes_per_swap": g_bytes / (a * row_block) + 3 * d * 4,
+            "flops_per_swap": search_flops_row / a + 6 * d,
+        }
+        for r in (argmin, topk):
+            r["intensity_flop_per_byte"] = (r["flops_per_swap"]
+                                            / r["hbm_bytes_per_swap"])
+        rows.append((argmin, topk))
+    return rows
+
+
+def print_swap_search(rows=None, *, k=8, accepts_per_pass=4.0):
+    if rows is None:
+        rows = swap_search_rows(k=k, accepts_per_pass=accepts_per_pass)
+    hdr = (f"{'d_in':>7s} {'RB':>4s} {'path':>12s} {'G-reads/swap':>13s} "
+           f"{'HBM B/swap':>12s} {'FLOP/swap':>12s} {'FLOP/B':>8s}")
+    print(f"\n=== swap-search roofline (fp32, A≈{accepts_per_pass:.0f} "
+          f"accepts/pass measured on the bench config) ===")
+    print(hdr)
+    for argmin, topk in rows:
+        for r in (argmin, topk):
+            print(f"{r['d_in']:7d} {r['row_block']:4d} {r['path']:>12s} "
+                  f"{r['g_reads_per_swap']:13.4f} "
+                  f"{r['hbm_bytes_per_swap']:12.3e} "
+                  f"{r['flops_per_swap']:12.3e} "
+                  f"{r['intensity_flop_per_byte']:8.1f}")
+        g_cut = (argmin["hbm_bytes_per_swap"] / topk["hbm_bytes_per_swap"])
+        print(f"{'':25s}-> {g_cut:.2f}x less HBM per accepted swap")
 
 
 def load(mesh: str) -> list[dict]:
@@ -56,6 +120,9 @@ def run(verbose: bool = True) -> dict:
         print(f"\nworst compute-fraction cell: {worst['arch']} "
               f"{worst['cell']} "
               f"({100*worst['roofline']['compute_fraction']:.1f}%)")
+    out["swap_search"] = swap_search_rows()
+    if verbose:
+        print_swap_search(out["swap_search"])
     return out
 
 

@@ -1,4 +1,4 @@
-"""SparseSwaps (paper Algorithm 1): monotone 1-swap mask refinement.
+"""SparseSwaps (paper Algorithm 1): monotone swap refinement, 1- and k-swap.
 
 Row-batched, jit-compiled, and shardable: all per-row state is laid out
 (R, d_in) so rows can be sharded over mesh axes with G replicated (the
@@ -6,23 +6,56 @@ paper's "fully parallelizable across rows"). Three swap-search backends:
 
 * ``dense``   — materialize ΔL (R, d, d). Reference; small d only.
 * ``chunked`` — stream over p-chunks of G; O(R·chunk) memory. Default on CPU.
-* ``pallas``  — fused tiled argmin TPU kernel (repro.kernels.swap_argmin).
+* ``pallas``  — fused tiled TPU kernels (``repro.kernels``): ``swap_argmin``
+  for k = 1, ``swap_topk`` for the k > 1 candidate search (VMEM-resident
+  per-row top-k lists). The commit then runs in jnp: the column-rescored
+  ``commit_swaps_columns`` by default, or — with
+  ``commit_mode="candidates"`` — the fused ``swap_topk_commit`` op whose
+  greedy decision loop executes in-kernel (cheaper per pass, fewer
+  accepts; same fixed-point guarantees).
 
 N:M patterns always use the block-diagonal search (cheap and exact).
+
+**k-swap refinement** (``k_swaps > 1``) amortizes the search: every
+O(R·d_in²) ΔL evaluation — a full stream of G from HBM — returns the k
+best candidate pairs per row instead of one, and ``swap_math.commit_swaps``
+greedily applies them in score order, re-scoring each candidate against
+the correlation state updated by earlier accepts in the batch (its true ΔL
+as applied) and rejecting any that turned non-improving. Monotonicity and
+the incremental loss bookkeeping stay exact; a pass that accepts nothing
+certifies a 1-swap fixed point (candidate 0 IS the exact argmin), so
+convergence detection is unchanged. Search passes drop by up to k×.
+
+**Active-row compaction** (``compact_every = S > 0``): every S passes,
+rows certified converged (their last pass accepted no swap — rows are
+independent, so a converged row stays converged) are gathered out of the
+working set; late passes only pay O(R_active·d_in²) for the rows still
+moving. Working-set sizes are bucketed to powers of two (pad slots repeat
+an active row and are scattered back idempotently) so the whole schedule
+hits a handful of jit cache entries. Bit-identical masks to the
+uncompacted loop — under test.
 
 The refinement loop is a ``lax.while_loop`` with true early exit (all rows
 at a 1-swap local optimum), or a ``lax.scan`` when a per-iteration loss
 history is requested. Losses are tracked incrementally via the accepted
-ΔL (L_{t+1} = L_t + ΔL*) — exactness of this bookkeeping is tested.
+ΔL (L_{t+1} = L_t + ΣΔL*) — exactness of this bookkeeping is tested.
+
+Search-pass accounting: wrap any refinement in
+``with sparseswaps.count_search_passes() as cnt:`` to count the ΔL
+evaluations (and row·pass volume) actually executed — the deterministic
+metric the CI perf guard and ``BENCH_pipeline.json`` rows report instead
+of wall-clock.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import masks as masks_lib
 from . import swap_math as sm
@@ -36,8 +69,8 @@ class RefineResult:
     loss_init: jnp.ndarray     # (d_out,) exact row loss before
     loss_final: jnp.ndarray    # (d_out,) exact row loss after
     swaps: jnp.ndarray         # (d_out,) accepted swaps per row
-    iters: jnp.ndarray         # scalar iterations executed (max over rows)
-    history: jnp.ndarray | None = None  # (t_max,) mean loss per iter if tracked
+    iters: jnp.ndarray         # scalar search passes executed (max over rows)
+    history: jnp.ndarray | None = None  # (t_max,) mean loss per pass if tracked
 
     @property
     def error_reduction(self) -> jnp.ndarray:
@@ -46,16 +79,79 @@ class RefineResult:
         return (self.loss_init - self.loss_final) / denom
 
 
+# ---------------------------------------------------------------------------
+# search-pass accounting (deterministic perf metric, not wall-clock)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class SearchPassCounter:
+    """Tally of ΔL evaluations executed while the hook was active.
+
+    ``passes``: full working-set swap searches (while/scan iterations —
+    each one streams the Gram state once). ``rows_scored``: Σ per pass of
+    the rows it scored, the quantity compaction shrinks. ``eq=False``:
+    counters are registered/removed by identity — two nested hooks with
+    equal tallies must not alias in the registry.
+    """
+
+    passes: int = 0
+    rows_scored: int = 0
+
+
+_COUNTERS: list[SearchPassCounter] = []
+
+
+@contextlib.contextmanager
+def count_search_passes():
+    """Context manager: count search passes of enclosed refinements."""
+    cnt = SearchPassCounter()
+    _COUNTERS.append(cnt)
+    try:
+        yield cnt
+    finally:
+        _COUNTERS.remove(cnt)
+
+
+def record_search_passes(passes, rows: int) -> None:
+    """Credit ``passes`` ΔL evaluations over ``rows`` rows to active hooks.
+
+    Called by every refinement driver (here, the engine, the sharded
+    refiners) right after a jit region executes; forces ``passes`` to host
+    only when a hook is installed.
+    """
+    if not _COUNTERS:
+        return
+    t = int(passes)
+    for cnt in _COUNTERS:
+        cnt.passes += t
+        cnt.rows_scored += t * int(rows)
+
+
 def _pick_method(method: Method, d_in: int, R: int) -> str:
     if method != "auto":
         return method
-    # the fused tiled-argmin kernel is the production path on TPU
+    # the fused tiled kernels are the production path on TPU
     if jax.default_backend() == "tpu":
         return "pallas"
     # dense ΔL is R*d*d fp32 — keep it under ~256MB
     if R * d_in * d_in * 4 <= 256 * 2**20:
         return "dense"
     return "chunked"
+
+
+def _pick_k(k_swaps: int | None, d_in: int, block: int | None) -> int:
+    """Resolve the ``k_swaps`` knob (None = auto).
+
+    Auto commits up to 8 swaps per search pass: candidates are distinct-p
+    by construction, so acceptance stays high until convergence, and the
+    O(R·k²) commit plus O(acc·R·d) column gathers stay negligible next to
+    the O(R·d²) search they amortize. Clamped to the feasible range.
+    """
+    k = 8 if k_swaps is None else k_swaps
+    if k < 1:
+        raise ValueError(f"k_swaps must be >= 1, got {k_swaps}")
+    return max(1, min(k, d_in))
 
 
 def _best_swap(method: str, block: int | None, chunk: int, w, m, c, G):
@@ -70,50 +166,294 @@ def _best_swap(method: str, block: int | None, chunk: int, w, m, c, G):
     return sm.best_swap_chunked(w, m, c, G, chunk=chunk)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("t_max", "eps", "method", "block", "chunk", "track_history"),
-)
-def _refine_block(
-    w, m0, G, *, t_max: int, eps: float, method: str, block: int | None,
-    chunk: int, track_history: bool,
-):
-    """Refine one block of rows. w, m0: (R, d_in); G: (d_in, d_in)."""
-    c0 = sm.correlation_vector(w, m0, G)
-    loss0 = sm.row_loss(w, m0, G)
-    swaps0 = jnp.zeros(w.shape[0], jnp.int32)
+def _topk_swaps(method: str, block: int | None, chunk: int, k: int,
+                w, m, c, G):
+    if block is not None:
+        return sm.topk_swaps_nm(w, m, c, G, block=block, k=k)
+    if method == "dense":
+        return sm.topk_swaps_dense(w, m, c, G, k=k)
+    if method == "pallas":
+        from repro.kernels import ops as kops
 
-    def step(m, c, loss, swaps):
+        return kops.swap_topk(w, m, c, G, k=k)
+    return sm.topk_swaps_chunked(w, m, c, G, k=k, chunk=chunk)
+
+
+def _swap_step(w, m, c, loss, swaps, G, *, eps, method, block, chunk,
+               k_swaps, commit_mode: str = "columns"):
+    """One search pass + commit. Returns (m, c, loss, swaps, row_accepted).
+
+    ``k_swaps == 1`` keeps the original argmin + ``apply_swap`` path (the
+    reference the k-swap engine is certified against). ``k_swaps > 1``
+    runs one search (the Pallas ``swap_topk`` kernel on that backend)
+    then a greedy exact commit:
+
+    * unstructured (``commit_mode="columns"``, the default): the stale
+      top-k columns each get an exact O(R·d) column-restricted u
+      re-search against the current state (``commit_swaps_columns``) —
+      candidates re-pair instead of dying when an earlier accept in the
+      batch consumed their u, which is what sustains ~k/2 accepts per
+      pass on correlated Grams;
+    * N:M, or ``commit_mode="candidates"``: the O(R·k²) candidate-space
+      re-score commit (``commit_swaps``; in-kernel on the Pallas path) —
+      the block search is already cheap, so N:M never pays the column
+      re-search.
+    """
+    if k_swaps == 1:
         dl, u, p = _best_swap(method, block, chunk, w, m, c, G)
         m, c, acc = sm.apply_swap(w, m, c, G, dl, u, p, eps=eps)
         loss = jnp.where(acc, loss + dl, loss)
         swaps = swaps + acc.astype(jnp.int32)
         return m, c, loss, swaps, acc
+    if block is None and commit_mode == "columns":
+        dl, u, p = _topk_swaps(method, block, chunk, k_swaps, w, m, c, G)
+        m, c, dsum, nacc = sm.commit_swaps_columns(w, m, c, G, dl, p,
+                                                   eps=eps)
+    elif method == "pallas" and block is None:
+        from repro.kernels import ops as kops
 
-    if track_history:
-        def scan_body(carry, _):
-            m, c, loss, swaps = carry
-            m, c, loss, swaps, _ = step(m, c, loss, swaps)
-            return (m, c, loss, swaps), jnp.mean(loss)
+        m, c, dsum, nacc = kops.swap_topk_commit(w, m, c, G, k=k_swaps,
+                                                 eps=eps)
+    else:
+        dl, u, p = _topk_swaps(method, block, chunk, k_swaps, w, m, c, G)
+        m, c, dsum, nacc = sm.commit_swaps(w, m, c, G, dl, u, p, eps=eps)
+    return m, c, loss + dsum, swaps + nacc, nacc > 0
 
-        (m, c, loss, swaps), hist = jax.lax.scan(
-            scan_body, (m0, c0, loss0, swaps0), None, length=t_max
-        )
-        return m, loss0, loss, swaps, jnp.int32(t_max), hist
 
+@partial(
+    jax.jit,
+    static_argnames=("n_iter", "eps", "method", "block", "chunk", "k_swaps",
+                     "commit_mode"),
+)
+def _refine_carry(w, m, c, loss, swaps, G, *, n_iter: int, eps: float,
+                  method: str, block: int | None, chunk: int, k_swaps: int,
+                  commit_mode: str = "columns"):
+    """Run up to ``n_iter`` swap passes from an existing carry.
+
+    Early-exits when no row accepts. Returns
+    (m, c, loss, swaps, t, row_alive): ``t`` = passes executed,
+    ``row_alive`` = whether each row's LAST pass accepted a swap (rows are
+    independent, so False certifies that row converged).
+    """
     def cond(state):
         _, _, _, _, t, alive = state
-        return (t < t_max) & alive
+        return (t < n_iter) & jnp.any(alive)
 
     def body(state):
         m, c, loss, swaps, t, _ = state
-        m, c, loss, swaps, acc = step(m, c, loss, swaps)
-        return m, c, loss, swaps, t + 1, jnp.any(acc)
+        m, c, loss, swaps, acc = _swap_step(
+            w, m, c, loss, swaps, G, eps=eps, method=method, block=block,
+            chunk=chunk, k_swaps=k_swaps, commit_mode=commit_mode)
+        return m, c, loss, swaps, t + 1, acc
 
-    m, _, loss, swaps, t, _ = jax.lax.while_loop(
-        cond, body, (m0, c0, loss0, swaps0, jnp.int32(0), jnp.bool_(True))
-    )
+    alive0 = jnp.ones(w.shape[0], bool)
+    m, c, loss, swaps, t, alive = jax.lax.while_loop(
+        cond, body, (m, c, loss, swaps, jnp.int32(0), alive0))
+    return m, c, loss, swaps, t, alive
+
+
+@jax.jit
+def _init_carry(w, m0, G):
+    """Initial (c, loss) for a row block — the ONE place the O(R·d²)
+    correlation matmul runs. Both the plain and the compacted drivers call
+    this at identical block shapes, so their starting states are bitwise
+    equal (matmul codegen is shape-dependent; sharing the jit entry is
+    what makes compaction bit-identical)."""
+    return sm.correlation_vector(w, m0, G), sm.row_loss(w, m0, G)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("t_max", "eps", "method", "block", "chunk", "k_swaps",
+                     "commit_mode"),
+)
+def _refine_scan_history(w, m0, c0, loss0, G, *, t_max, eps, method, block,
+                         chunk, k_swaps, commit_mode):
+    """Fixed-length scan variant recording the mean loss per pass."""
+    swaps0 = jnp.zeros(w.shape[0], jnp.int32)
+
+    def scan_body(carry, _):
+        m, c, loss, swaps = carry
+        m, c, loss, swaps, _ = _swap_step(
+            w, m, c, loss, swaps, G, eps=eps, method=method, block=block,
+            chunk=chunk, k_swaps=k_swaps, commit_mode=commit_mode)
+        return (m, c, loss, swaps), jnp.mean(loss)
+
+    (m, c, loss, swaps), hist = jax.lax.scan(
+        scan_body, (m0, c0, loss0, swaps0), None, length=t_max)
+    return m, loss, swaps, hist
+
+
+def _refine_block(
+    w, m0, G, *, t_max: int, eps: float, method: str, block: int | None,
+    chunk: int, track_history: bool, k_swaps: int = 1,
+    commit_mode: str = "columns",
+):
+    """Refine one block of rows. w, m0: (R, d_in); G: (d_in, d_in)."""
+    c0, loss0 = _init_carry(w, m0, G)
+
+    if track_history:
+        m, loss, swaps, hist = _refine_scan_history(
+            w, m0, c0, loss0, G, t_max=t_max, eps=eps, method=method,
+            block=block, chunk=chunk, k_swaps=k_swaps,
+            commit_mode=commit_mode)
+        return m, loss0, loss, swaps, jnp.int32(t_max), hist
+
+    swaps0 = jnp.zeros(w.shape[0], jnp.int32)
+    m, _, loss, swaps, t, _ = _refine_carry(
+        w, m0, c0, loss0, swaps0, G, n_iter=t_max, eps=eps, method=method,
+        block=block, chunk=chunk, k_swaps=k_swaps, commit_mode=commit_mode)
     return m, loss0, loss, swaps, t, None
+
+
+# ---------------------------------------------------------------------------
+# active-row compaction driver
+# ---------------------------------------------------------------------------
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= n (>= lo): a handful of jit entries."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_iter", "eps", "method", "block", "chunk", "k_swaps",
+                     "commit_mode"),
+)
+def _refine_carry_stacked(W, M, C, L, S, G, *, n_iter, eps, method, block,
+                          chunk, k_swaps, commit_mode: str = "columns"):
+    """vmapped ``_refine_carry`` over stacked instances (N, R, d)+(N, d, d).
+
+    Under vmap the while_loop steps every instance until ALL are done;
+    converged lanes keep executing a no-op body (their state is a fixed
+    point), so results match per-instance execution exactly.
+    """
+    run = lambda w, m, c, l, s, g: _refine_carry(
+        w, m, c, l, s, g, n_iter=n_iter, eps=eps, method=method,
+        block=block, chunk=chunk, k_swaps=k_swaps, commit_mode=commit_mode)
+    return jax.vmap(run)(W, M, C, L, S, G)
+
+
+@jax.jit
+def _gather_rows(tree, idx):
+    """Per-instance row gather: x (N, R, ...) + idx (N, R') -> (N, R', ...)."""
+    take = lambda x: jax.vmap(lambda xi, ii: jnp.take(xi, ii, axis=0))(
+        x, idx)
+    return jax.tree.map(take, tree)
+
+
+@jax.jit
+def _scatter_rows(tree, sub, idx):
+    """Inverse of ``_gather_rows``; duplicate indices write equal values."""
+    put = lambda x, v: jax.vmap(lambda xi, vi, ii: xi.at[ii].set(vi))(
+        x, v, idx)
+    return jax.tree.map(put, tree, sub)
+
+
+def refine_stacked_compacted(W, M0, G, *, t_max: int, eps: float,
+                             method: str, block: int | None, chunk: int,
+                             k_swaps: int, compact_every: int,
+                             commit_mode: str = "columns",
+                             row_block: int | None = None):
+    """Stacked refinement with active-row compaction.
+
+    W, M0: (N, R, d); G: (N, d, d). Every ``compact_every`` passes the
+    working set drops rows whose last pass accepted nothing (certified
+    1-swap fixed points), gathered per instance; the next segment only
+    scores surviving rows. Working-set sizes bucket to powers of two, and
+    pad slots repeat an instance's first active row — they recompute its
+    result and scatter the identical values back.
+
+    Bit-identity with the uncompacted loop (under test for N = 1, the
+    ``refine(compact_every=...)`` path): the initial correlation state is
+    computed through the SAME ``_init_carry`` jit entry at the SAME
+    ``row_block`` partition as the plain path, and the per-pass step math
+    is shape-stable, so gathering converged rows out changes which rows a
+    pass scores but never a surviving row's trajectory.
+
+    Returns (M, L0, L, swaps, passes): stacked results + total search
+    passes executed (compaction does not change per-row pass counts, only
+    how many rows each pass scores).
+    """
+    N, R, d = W.shape
+    rb = row_block or R
+    true_R = R
+    pad = (-R) % rb
+    if pad:
+        # pad the trailing partial block like the uncompacted paths do
+        # (zero weights under a keep-all mask: never a feasible candidate)
+        # so _init_carry and the carry run at the same block shapes
+        W = jnp.pad(W, ((0, 0), (0, pad), (0, 0)))
+        M0 = jnp.pad(M0, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        R += pad
+    # init per instance per row block — the same jit entry (and therefore
+    # the same matmul codegen) the uncompacted path uses
+    Cs, Ls = [], []
+    for i in range(N):
+        cs, ls = zip(*(_init_carry(W[i, lo:lo + rb], M0[i, lo:lo + rb],
+                                   G[i])
+                       for lo in range(0, R, rb)))
+        Cs.append(jnp.concatenate(cs, axis=0))
+        Ls.append(jnp.concatenate(ls, axis=0))
+    C = jnp.stack(Cs)
+    L0 = jnp.stack(Ls)
+    state = {"m": M0, "c": C, "l": L0, "s": jnp.zeros((N, R), jnp.int32)}
+
+    active = [np.arange(R)] * N
+    done, passes = 0, 0
+    while done < t_max and any(a.size for a in active):
+        width = _bucket(max(a.size for a in active))
+        if width >= R:                      # nothing to compact away yet
+            width = R
+            idx = np.tile(np.arange(R), (N, 1))
+            reals = [R] * N                 # every slot is a genuine row
+        else:
+            idx = np.stack([
+                np.concatenate([a, np.full(width - a.size,
+                                           a[0] if a.size else 0)])
+                for a in active])
+            reals = [a.size for a in active]
+        idx_j = jnp.asarray(idx, jnp.int32)
+        seg = min(compact_every, t_max - done)
+        sub = _gather_rows(state, idx_j)
+        wg = _gather_rows({"w": W}, idx_j)["w"]
+        kw = dict(n_iter=seg, eps=eps, method=method, block=block,
+                  chunk=chunk, k_swaps=k_swaps, commit_mode=commit_mode)
+        if N == 1:
+            # same jit entry as the uncompacted _refine_block carry
+            m, c, l, s, t, alive = _refine_carry(
+                wg[0], sub["m"][0], sub["c"][0], sub["l"][0], sub["s"][0],
+                G[0], **kw)
+            m, c, l, s = m[None], c[None], l[None], s[None]
+            t, alive = jnp.asarray(t)[None], alive[None]
+        else:
+            m, c, l, s, t, alive = _refine_carry_stacked(
+                wg, sub["m"], sub["c"], sub["l"], sub["s"], G, **kw)
+        state = _scatter_rows(state, {"m": m, "c": c, "l": l, "s": s},
+                              idx_j)
+        t_host = int(jnp.max(t))
+        record_search_passes(t_host, N * width)
+        passes += t_host
+        alive_np = np.asarray(alive)
+        # next working set = the gathered rows whose last pass accepted
+        # (indexed via idx: gathered slot j IS row idx[i, j])
+        active = [idx[i, :reals[i]][alive_np[i, :reals[i]]]
+                  for i in range(N)]
+        if t_host < seg:        # every gathered row converged mid-segment
+            break
+        done += seg
+    trim = lambda x: x[:, :true_R]
+    return (trim(state["m"]), trim(L0), trim(state["l"]),
+            trim(state["s"]), passes)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
 
 
 def refine(
@@ -128,40 +468,81 @@ def refine(
     chunk: int = 512,
     row_block: int | None = None,
     track_history: bool = False,
+    k_swaps: int = 1,
+    compact_every: int = 0,
+    commit_mode: str = "columns",
 ) -> RefineResult:
     """Run SparseSwaps on a full weight matrix.
 
     Rows are processed in blocks of ``row_block`` (None = all at once) to
-    bound memory; each block is an independent jit invocation, so callers
-    can also shard W's rows across devices and call this per shard.
+    bound memory; a partial last block is padded to ``row_block`` with
+    already-converged dummy rows (zero weights under a keep-all mask — no
+    candidate is ever feasible) and sliced back, so every block hits the
+    same jit cache entry. Callers can also shard W's rows across devices
+    and call this per shard.
+
+    ``k_swaps``: candidate swaps committed per search pass (1 = the
+    paper's loop; >1 amortizes each O(R·d_in²) ΔL evaluation over up to k
+    exact, monotone swaps). ``t_max`` bounds search PASSES, so the swap
+    budget is ``t_max · k_swaps``.
+
+    ``compact_every = S``: gather converged rows out of the working set
+    every S passes (bit-identical masks, fewer rows scored late in the
+    run). Incompatible with ``track_history`` (the history is a
+    full-working-set mean per pass).
+
+    ``commit_mode`` (k > 1, unstructured only): ``"columns"`` (default)
+    re-searches the best u per candidate column against the current
+    state — the high-accept production commit; ``"candidates"`` re-scores
+    the searched pairs in O(R·k²) candidate space (in-kernel on the
+    Pallas backend via ``ops.swap_topk_commit``) — cheaper per pass but
+    fewer accepts. N:M always commits in candidate space.
     """
+    if compact_every and track_history:
+        raise ValueError("compact_every is incompatible with track_history")
     d_out, d_in = W.shape
     block = pattern.block(d_in)
     meth = _pick_method(method, d_in, row_block or d_out)
+    k = _pick_k(k_swaps, d_in, block)
     rb = row_block or d_out
 
+    W32 = W.astype(jnp.float32)
+    M32 = mask_init.astype(jnp.float32)
+    G32 = G.astype(jnp.float32)
+    pad = (-d_out) % rb
+    if pad:
+        # converged dummy rows: zero weights, keep-all mask -> b == +inf
+        # everywhere, no feasible candidate, never accepted
+        W32 = jnp.pad(W32, ((0, pad), (0, 0)))
+        M32 = jnp.pad(M32, ((0, pad), (0, 0)), constant_values=1.0)
+
+    if compact_every:
+        m, l0, l1, swaps, passes = refine_stacked_compacted(
+            W32[None], M32[None], G32[None], t_max=t_max, eps=eps,
+            method=meth, block=block, chunk=chunk, k_swaps=k,
+            compact_every=compact_every, row_block=rb,
+            commit_mode=commit_mode)
+        return RefineResult(
+            mask=m[0, :d_out], loss_init=l0[0, :d_out],
+            loss_final=l1[0, :d_out], swaps=swaps[0, :d_out],
+            iters=jnp.int32(passes))
+
     outs = []
-    for lo in range(0, d_out, rb):
-        hi = min(lo + rb, d_out)
-        outs.append(
-            _refine_block(
-                W[lo:hi].astype(jnp.float32),
-                mask_init[lo:hi].astype(jnp.float32),
-                G.astype(jnp.float32),
-                t_max=t_max,
-                eps=eps,
-                method=meth,
-                block=block,
-                chunk=chunk,
-                track_history=track_history,
-            )
+    for lo in range(0, W32.shape[0], rb):
+        out = _refine_block(
+            W32[lo:lo + rb], M32[lo:lo + rb], G32,
+            t_max=t_max, eps=eps, method=meth, block=block, chunk=chunk,
+            track_history=track_history, k_swaps=k,
+            commit_mode=commit_mode,
         )
-    cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=0)
+        record_search_passes(out[4], rb)
+        outs.append(out)
+    cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=0)[:d_out]
     hist = None
     if track_history:
-        # weighted mean across row blocks
-        weights = jnp.array([o[0].shape[0] for o in outs], jnp.float32)
-        hist = sum(o[5] * wgt for o, wgt in zip(outs, weights)) / jnp.sum(weights)
+        # mean over the true rows: pad rows sit at loss 0 and are excluded
+        # by rescaling each padded block mean back to its real-row sum
+        hist = sum(o[5] * rb for o in outs) / d_out
     return RefineResult(
         mask=cat(0),
         loss_init=cat(1),
@@ -182,11 +563,14 @@ def refine_layer(
     eps: float = 0.0,
     method: Method = "auto",
     row_block: int | None = None,
+    k_swaps: int = 1,
+    compact_every: int = 0,
 ) -> RefineResult:
     """Convenience: warmstart + refine in one call (the paper's pipeline)."""
     from .warmstart import warmstart_mask
 
     m0 = warmstart_mask(W, G, pattern, criterion=warmstart)
     return refine(
-        W, G, m0, pattern, t_max=t_max, eps=eps, method=method, row_block=row_block
+        W, G, m0, pattern, t_max=t_max, eps=eps, method=method,
+        row_block=row_block, k_swaps=k_swaps, compact_every=compact_every
     )

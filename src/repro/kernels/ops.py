@@ -17,6 +17,7 @@ from repro.core import swap_math as sm
 from . import ref as ref_lib
 from .gram import gram_xtx_padded
 from .swap_argmin import swap_argmin_padded
+from .swap_topk import swap_commit_padded, swap_topk_padded
 
 
 def _on_tpu() -> bool:
@@ -46,9 +47,19 @@ def swap_argmin(
     if interpret is None:
         interpret = not _on_tpu()
     R, d = w.shape
+    a, b, w32, G32, tile = _pad_swap_inputs(w, m, c, G, row_block, tile)
+    best, u, p = swap_argmin_padded(
+        a, b, w32, G32, row_block=row_block, tile_u=tile, tile_p=tile,
+        interpret=interpret,
+    )
+    return best[:R], u[:R], p[:R]
+
+
+def _pad_swap_inputs(w, m, c, G, row_block: int, tile: int):
+    """Shared a/b scoring + padding for the swap-search kernels."""
+    R, d = w.shape
     g_diag = jnp.diagonal(G)
     a, b = sm.swap_scores(w, m, c, g_diag)
-
     tile = min(tile, _round_up(d, 128))
     Rp = _round_up(R, row_block)
     dp = _round_up(d, tile)
@@ -59,11 +70,81 @@ def swap_argmin(
         b = jnp.pad(b, ((0, Rp - R), (0, dp - d)), constant_values=jnp.inf)
         w32 = jnp.pad(w32, ((0, Rp - R), (0, dp - d)))
         G32 = jnp.pad(G32, ((0, dp - d), (0, dp - d)))
-    best, u, p = swap_argmin_padded(
-        a, b, w32, G32, row_block=row_block, tile_u=tile, tile_p=tile,
+    return a, b, w32, G32, tile
+
+
+def swap_topk(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    c: jnp.ndarray,
+    G: jnp.ndarray,
+    *,
+    k: int,
+    row_block: int = 8,
+    tile: int = 256,
+    interpret: bool | None = None,
+):
+    """k best candidate swaps per row: (ΔL, u, p) each (R, k), fused.
+
+    One tiled pass over G (VMEM-resident per-row top-k lists, see
+    ``kernels.swap_topk``) instead of k argmin launches. Candidate order
+    and tie-break match ``swap_math.topk_swaps_*`` bit-for-bit on feasible
+    entries; +inf-padded tail entries are clamped into range (and rejected
+    by ``commit_swaps`` via the +inf ΔL).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    R, d = w.shape
+    a, b, w32, G32, tile = _pad_swap_inputs(w, m, c, G, row_block, tile)
+    vals, u, p = swap_topk_padded(
+        a, b, w32, G32, k=k, row_block=row_block, tile_u=tile, tile_p=tile,
         interpret=interpret,
     )
-    return best[:R], u[:R], p[:R]
+    return (vals[:R], jnp.minimum(u[:R], d - 1), jnp.minimum(p[:R], d - 1))
+
+
+def swap_topk_commit(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    c: jnp.ndarray,
+    G: jnp.ndarray,
+    *,
+    k: int,
+    eps: float = 0.0,
+    row_block: int = 8,
+    tile: int = 256,
+    interpret: bool | None = None,
+):
+    """One fused k-swap refinement step on the Pallas path.
+
+    Search (``swap_topk`` kernel) -> candidate sub-Gram gather (O(R·k²))
+    -> in-kernel greedy commit decisions (``swap_commit_padded``, runs
+    ``swap_math.commit_decisions`` verbatim) -> full-width Eq. 6 apply.
+    Returns (m', c', dl_sum (R,), n_accepted (R,)) exactly like
+    ``swap_math.commit_swaps``, and bit-identical to it given the same
+    candidates.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    R = w.shape[0]
+    dl, u, p = swap_topk(w, m, c, G, k=k, row_block=row_block, tile=tile,
+                         interpret=interpret)
+    c32 = c.astype(jnp.float32)
+    valid = jnp.isfinite(dl).astype(jnp.float32)
+    wu, wp, cu, cp, Suu, Sup, Spp = sm.gather_candidate_stats(
+        w, c32, G, u, p)
+    Rp = _round_up(R, row_block)
+    if Rp != R:
+        padk = ((0, Rp - R), (0, 0))
+        padc = ((0, Rp - R), (0, 0), (0, 0))
+        wu, wp, cu, cp = (jnp.pad(x, padk) for x in (wu, wp, cu, cp))
+        Suu, Sup, Spp = (jnp.pad(x, padc) for x in (Suu, Sup, Spp))
+        u, p = (jnp.pad(x, padk) for x in (u, p))
+        valid = jnp.pad(valid, padk)         # 0 = pad rows never accept
+    acc, dls = swap_commit_padded(wu, wp, cu, cp, Suu, Sup, Spp, u, p,
+                                  valid, eps=eps, k=k, row_block=row_block,
+                                  interpret=interpret)
+    return sm.apply_commits(w, m, c32, G, acc[:R], dls[:R], u[:R], p[:R])
 
 
 def gram_xtx(

@@ -40,17 +40,20 @@ parse_pattern = masks_lib.parse_pattern
 
 
 def _build_recipe(pattern, *, recipe: str | None, warmstart: str,
-                  method: str, t_max: int) -> pruning.PruneRecipe:
+                  method: str, t_max: int,
+                  k_swaps: int | None = None) -> pruning.PruneRecipe:
     if recipe is not None:
         return pruning.PruneRecipe.from_json(Path(recipe).read_text())
     return pruning.PruneRecipe.single(
         parse_pattern(pattern), method=method, warmstart=warmstart,
-        t_max=t_max)
+        t_max=t_max, k_swaps=k_swaps)
 
 
 def prune(arch: str, *, tiny: bool = True, pattern="0.6",
           warmstart: str = "wanda", method: str = "sparseswaps",
-          t_max: int = 50, n_calib: int = 16, calib_seq: int = 128,
+          t_max: int = 50, k_swaps: int | None = None,
+          compact_every: int | None = None,
+          n_calib: int = 16, calib_seq: int = 128,
           calib_batch: int = 4, from_ckpt: str | None = None,
           out_dir: str | None = None, seed: int = 0,
           calib_ckpt_every: int = 0, mesh: str | None = None,
@@ -63,7 +66,7 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
     rec = _build_recipe(pattern, recipe=recipe, warmstart=warmstart,
-                        method=method, t_max=t_max)
+                        method=method, t_max=t_max, k_swaps=k_swaps)
     mesh_obj = None
     if mesh:
         from repro.launch import mesh as mesh_lib
@@ -73,7 +76,8 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
     if plan_only:
         # shapes only — no weights materialized, no FLOP spent
         abstract = jax.eval_shape(lambda: api.init(jax.random.key(seed)))
-        plan = pruning.plan_pruning(api, abstract, rec, mesh=mesh_obj)
+        plan = pruning.plan_pruning(api, abstract, rec, mesh=mesh_obj,
+                                    compact_every=compact_every)
         print(plan.describe())
         return {"plan": plan}
 
@@ -87,7 +91,8 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
             jax.eval_shape(lambda: steps_lib.init_state(api, jax.random.key(seed))))
         params = state.params
 
-    plan = pruning.plan_pruning(api, params, rec, mesh=mesh_obj)
+    plan = pruning.plan_pruning(api, params, rec, mesh=mesh_obj,
+                                compact_every=compact_every)
     if verbose:
         print(plan.describe())
 
@@ -146,6 +151,10 @@ def main(argv=None):
     ap.add_argument("--method", default="sparseswaps",
                     choices=["none", "sparseswaps", "dsnot", "sparsegpt"])
     ap.add_argument("--t-max", type=int, default=50)
+    ap.add_argument("--k-swaps", type=int, default=None,
+                    help="swaps committed per search pass (default: auto)")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="gather converged rows out every S passes")
     ap.add_argument("--n-calib", type=int, default=16)
     ap.add_argument("--from-ckpt", default=None)
     ap.add_argument("--out-dir", default=None)
@@ -167,6 +176,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
           warmstart=args.warmstart, method=args.method, t_max=args.t_max,
+          k_swaps=args.k_swaps, compact_every=args.compact_every,
           n_calib=args.n_calib, from_ckpt=args.from_ckpt,
           out_dir=args.out_dir, seed=args.seed, mesh=args.mesh,
           recipe=args.recipe, plan_only=args.plan_only,

@@ -53,7 +53,17 @@ DEFAULT_GRAM_BUDGET = 1 << 30
 
 @dataclasses.dataclass(frozen=True)
 class RefineContext:
-    """Immutable per-run knobs every refiner sees (hashable: jit-static)."""
+    """Immutable per-run knobs every refiner sees (hashable: jit-static).
+
+    ``k_swaps``: candidate swaps committed per search pass (None = auto,
+    resolved by ``sparseswaps._pick_k`` — currently 8). ``t_max`` bounds
+    search PASSES, so the swap budget is ``t_max · k_swaps``; every pass
+    stays exactly monotone and convergence is still certified by the
+    1-swap argmin (see ``core.sparseswaps``). ``compact_every``: gather
+    converged rows out of the working set every S passes (None/0 = off;
+    single-host engine path only — the sharded refiners keep static
+    shapes for SPMD).
+    """
 
     warmstart: str = "wanda"
     t_max: int = 100
@@ -63,6 +73,8 @@ class RefineContext:
     row_block: int | None = None
     mesh: Mesh | None = None
     gram_budget_bytes: int = DEFAULT_GRAM_BUDGET
+    k_swaps: int | None = None
+    compact_every: int | None = None
 
     def with_overrides(self, **overrides) -> "RefineContext":
         """Per-group context: replace only the knobs a recipe rule sets.
@@ -161,7 +173,8 @@ def _refine_none(W, gram, pattern, ctx):
 
 @register("sparseswaps")
 def _refine_sparseswaps(W, gram, pattern, ctx):
-    """The paper's 1-swap refinement, vmapped over instances (or sharded)."""
+    """The paper's swap refinement (k-swap), vmapped over instances
+    (or sharded via the mesh dispatch below)."""
     if ctx.mesh is not None:
         return _refine_sparseswaps_sharded(W, gram, pattern, ctx)
     N, R, d = W.shape
@@ -171,14 +184,34 @@ def _refine_sparseswaps(W, gram, pattern, ctx):
     rb = ctx.row_block or R
     meth = sparseswaps._pick_method(ctx.swap_method, d, N * rb)
     block = pattern.block(d)
+    k = sparseswaps._pick_k(ctx.k_swaps, d, block)
+
+    if ctx.compact_every:
+        m, l0, l1, swaps, _ = sparseswaps.refine_stacked_compacted(
+            W.astype(jnp.float32), m0, gram.G.astype(jnp.float32),
+            t_max=ctx.t_max, eps=ctx.eps, method=meth, block=block,
+            chunk=ctx.chunk, k_swaps=k, compact_every=ctx.compact_every,
+            row_block=ctx.row_block)
+        return GroupResult(masks=m, loss_init=l0, loss_final=l1, swaps=swaps)
+
     run = jax.vmap(
         lambda w, m_, g: sparseswaps._refine_block(
             w, m_, g, t_max=ctx.t_max, eps=ctx.eps, method=meth, block=block,
-            chunk=ctx.chunk, track_history=False))
-    outs = [run(W[:, lo:lo + rb].astype(jnp.float32), m0[:, lo:lo + rb],
-                gram.G)
-            for lo in range(0, R, rb)]
-    cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=1)
+            chunk=ctx.chunk, track_history=False, k_swaps=k))
+    # pad the trailing partial block to ``rb`` rows (zero weights under a
+    # keep-all mask: never a feasible candidate) so every block hits one
+    # jit cache entry; results are sliced back to the true rows
+    pad = (-R) % rb
+    W32 = W.astype(jnp.float32)
+    if pad:
+        W32 = jnp.pad(W32, ((0, 0), (0, pad), (0, 0)))
+        m0 = jnp.pad(m0, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    outs = []
+    for lo in range(0, W32.shape[1], rb):
+        out = run(W32[:, lo:lo + rb], m0[:, lo:lo + rb], gram.G)
+        sparseswaps.record_search_passes(jnp.max(out[4]), N * rb)
+        outs.append(out)
+    cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=1)[:, :R]
     return GroupResult(masks=cat(0), loss_init=cat(1), loss_final=cat(2),
                        swaps=cat(3))
 
@@ -245,7 +278,8 @@ def _sharded_regime(pattern, d_in: int, mesh: Mesh, budget: int) -> str:
     return "gram"
 
 
-def _refine_rows_padded(W, G, m0, pattern, mesh, *, t_max, eps, chunk):
+def _refine_rows_padded(W, G, m0, pattern, mesh, *, t_max, eps, chunk,
+                        k_swaps=1):
     """refine_rows_sharded with row padding to the mesh device count.
 
     Pad rows are zero weights under a keep-all mask: every candidate swap
@@ -258,14 +292,16 @@ def _refine_rows_padded(W, G, m0, pattern, mesh, *, t_max, eps, chunk):
         W = jnp.pad(W, ((0, pad), (0, 0)))
         m0 = jnp.pad(m0, ((0, pad), (0, 0)), constant_values=1.0)
     m, l0, l1 = distributed.refine_rows_sharded(
-        W, G, m0, pattern, mesh, t_max=t_max, eps=eps, chunk=chunk)
+        W, G, m0, pattern, mesh, t_max=t_max, eps=eps, chunk=chunk,
+        k_swaps=k_swaps)
     return m[:R], l0[:R], l1[:R]
 
 
 def _refine_sparseswaps_sharded(W, gram, pattern, ctx):
-    N, _, d = W.shape
+    N, R, d = W.shape
     mesh = ctx.mesh
     regime = _sharded_regime(pattern, d, mesh, ctx.gram_budget_bytes)
+    k = sparseswaps._pick_k(ctx.k_swaps, d, pattern.block(d))
     masks, m0s, l0s, l1s = [], [], [], []
     for i in range(N):
         Wi = W[i].astype(jnp.float32)
@@ -273,11 +309,13 @@ def _refine_sparseswaps_sharded(W, gram, pattern, ctx):
         m0 = warmstart_mask(Wi, Gi, pattern, criterion=ctx.warmstart)
         if regime == "gram":
             m, l0, l1 = distributed.refine_g_sharded(
-                Wi, Gi, m0, pattern, mesh, t_max=ctx.t_max, eps=ctx.eps)
+                Wi, Gi, m0, pattern, mesh, t_max=ctx.t_max, eps=ctx.eps,
+                k_swaps=k)
         else:
             m, l0, l1 = _refine_rows_padded(
                 Wi, Gi, m0, pattern, mesh, t_max=ctx.t_max, eps=ctx.eps,
-                chunk=ctx.chunk)
+                chunk=ctx.chunk, k_swaps=k)
+        sparseswaps.record_search_passes(ctx.t_max, R)
         masks.append(m)
         m0s.append(m0)
         l0s.append(l0)
@@ -296,7 +334,8 @@ def _refine_sparseswaps_sharded(W, gram, pattern, ctx):
 
 def refine_instance(W, gram: sites_lib.GramStats, pattern, *, method: str,
                     warmstart: str, t_max: int, eps: float,
-                    swap_method: str, row_block):
+                    swap_method: str, row_block, k_swaps=None,
+                    compact_every=None):
     """Prune one (d_out, d_in) instance. Returns (mask, l0, l1, swaps, W').
 
     The original pipeline hot loop, one jit per matrix — kept as the
@@ -320,8 +359,12 @@ def refine_instance(W, gram: sites_lib.GramStats, pattern, *, method: str,
         return m0, l0, l0, jnp.zeros(W.shape[0], jnp.int32), None
 
     if method == "sparseswaps":
+        k = sparseswaps._pick_k(k_swaps, W.shape[1],
+                                pattern.block(W.shape[1]))
         res = sparseswaps.refine(W, G, m0, pattern, t_max=t_max, eps=eps,
-                                 method=swap_method, row_block=row_block)
+                                 method=swap_method, row_block=row_block,
+                                 k_swaps=k,
+                                 compact_every=compact_every or 0)
         return res.mask, res.loss_init, res.loss_final, res.swaps, None
 
     if method == "dsnot":
@@ -348,7 +391,8 @@ def refine_group_reference(method: str, group: sites_lib.SiteGroup,
         m, l0, l1, sw, w1 = refine_instance(
             group.weights[i], group.gram.instance(i), pattern, method=method,
             warmstart=ctx.warmstart, t_max=ctx.t_max, eps=ctx.eps,
-            swap_method=ctx.swap_method, row_block=ctx.row_block)
+            swap_method=ctx.swap_method, row_block=ctx.row_block,
+            k_swaps=ctx.k_swaps, compact_every=ctx.compact_every)
         ms.append(m)
         l0s.append(l0)
         l1s.append(l1)

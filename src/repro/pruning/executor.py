@@ -141,7 +141,8 @@ def _rule_tag(pg: plan_lib.PlannedGroup) -> dict:
     """The resolved-rule fingerprint a group checkpoint must match."""
     r = pg.rule
     return {"pattern": r.pattern_str, "method": r.method,
-            "warmstart": r.warmstart, "t_max": r.t_max, "eps": r.eps}
+            "warmstart": r.warmstart, "t_max": r.t_max, "eps": r.eps,
+            "k_swaps": r.k_swaps}
 
 
 def _data_fingerprint(g: sites_lib.SiteGroup) -> str:

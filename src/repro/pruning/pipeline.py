@@ -62,6 +62,8 @@ def prune_model(
     eps: float = 0.0,
     swap_method: str = "auto",
     row_block: int | None = None,
+    k_swaps: int | None = None,
+    compact_every: int | None = None,
     taps: dict | None = None,
     progress: bool = False,
     mesh: Mesh | None = None,
@@ -75,12 +77,17 @@ def prune_model(
     Equivalent to ``PruneRecipe.single(pattern, ...)`` -> ``plan_pruning``
     -> ``PruneExecutor.run`` (bit-identical masks, under test).
     ``ckpt_dir`` opts into the executor's group-granular resume.
+    ``k_swaps`` (None = auto): swaps committed per search pass —
+    ``t_max`` bounds passes, so the swap budget is ``t_max · k_swaps``;
+    ``compact_every``: active-row compaction period (see
+    ``core.sparseswaps``).
     """
     recipe = PruneRecipe.single(pattern, method=method, warmstart=warmstart,
-                                t_max=t_max, eps=eps)
+                                t_max=t_max, eps=eps, k_swaps=k_swaps)
     plan = plan_pruning(api, params, recipe, mesh=mesh,
                         gram_budget_bytes=gram_budget_bytes,
-                        swap_method=swap_method, row_block=row_block)
+                        swap_method=swap_method, row_block=row_block,
+                        compact_every=compact_every)
     if callback is None and progress:
         callback = PrintProgress()
     ex = PruneExecutor(api, params, plan, taps=taps, ckpt_dir=ckpt_dir,

@@ -83,6 +83,7 @@ class PrunePlan:
     swap_method: str = "auto"
     chunk: int = 512
     row_block: int | None = None
+    compact_every: int | None = None   # active-row compaction period
     cfg: object = None           # ArchConfig; None only for legacy pickles
 
     @property
@@ -106,11 +107,13 @@ class PrunePlan:
             warmstart=self.recipe.warmstart, t_max=self.recipe.t_max,
             eps=self.recipe.eps, swap_method=self.swap_method,
             chunk=self.chunk, row_block=self.row_block, mesh=self.mesh,
-            gram_budget_bytes=self.gram_budget_bytes)
+            gram_budget_bytes=self.gram_budget_bytes,
+            k_swaps=self.recipe.k_swaps, compact_every=self.compact_every)
 
     def group_context(self, g: PlannedGroup) -> engine_lib.RefineContext:
         return self.base_context().with_overrides(
-            warmstart=g.rule.warmstart, t_max=g.rule.t_max, eps=g.rule.eps)
+            warmstart=g.rule.warmstart, t_max=g.rule.t_max, eps=g.rule.eps,
+            k_swaps=g.rule.k_swaps)
 
     # -- calibration costing ------------------------------------------------
 
@@ -173,7 +176,7 @@ class PrunePlan:
         """The dry-run table: every group, its treatment, its cost."""
         hdr = (f"{'site':30s} {'n':>4s} {'d_out x d_in':>14s} "
                f"{'pattern':>8s} {'method':>11s} {'warm':>9s} {'t_max':>5s} "
-               f"{'path':>13s} {'W MiB':>8s} {'G MiB':>8s}")
+               f"{'k':>4s} {'path':>13s} {'W MiB':>8s} {'G MiB':>8s}")
         lines = [hdr, "-" * len(hdr)]
         for g in self.groups:
             s, r = g.spec, g.rule
@@ -181,13 +184,15 @@ class PrunePlan:
                 lines.append(
                     f"{s.name:30s} {s.n_instances:4d} "
                     f"{f'{s.d_out} x {s.d_in}':>14s} {'-':>8s} {'skip':>11s} "
-                    f"{'-':>9s} {'-':>5s} {'skip':>13s} {'-':>8s} {'-':>8s}")
+                    f"{'-':>9s} {'-':>5s} {'-':>4s} {'skip':>13s} {'-':>8s} "
+                    f"{'-':>8s}")
                 continue
+            k_s = "auto" if r.k_swaps is None else str(r.k_swaps)
             lines.append(
                 f"{s.name:30s} {s.n_instances:4d} "
                 f"{f'{s.d_out} x {s.d_in}':>14s} {r.pattern_str:>8s} "
                 f"{r.method:>11s} {r.warmstart:>9s} {r.t_max:5d} "
-                f"{g.engine_path:>13s} {g.weight_bytes/2**20:8.1f} "
+                f"{k_s:>4s} {g.engine_path:>13s} {g.weight_bytes/2**20:8.1f} "
                 f"{g.gram_bytes/2**20:8.1f}")
         lines.append("-" * len(hdr))
         n_active = len(self.active_groups)
@@ -243,7 +248,8 @@ def plan_pruning(api, params, recipe: recipe_lib.PruneRecipe, *,
                  mesh: Mesh | None = None,
                  gram_budget_bytes: int = engine_lib.DEFAULT_GRAM_BUDGET,
                  swap_method: str = "auto", chunk: int = 512,
-                 row_block: int | None = None) -> PrunePlan:
+                 row_block: int | None = None,
+                 compact_every: int | None = None) -> PrunePlan:
     """Resolve ``recipe`` against the model's sites into a ``PrunePlan``.
 
     Pure shape arithmetic: ``params`` may be the ``jax.eval_shape`` tree of
@@ -261,4 +267,5 @@ def plan_pruning(api, params, recipe: recipe_lib.PruneRecipe, *,
     return PrunePlan(groups=tuple(groups), recipe=recipe, mesh=mesh,
                      gram_budget_bytes=gram_budget_bytes,
                      swap_method=swap_method, chunk=chunk,
-                     row_block=row_block, cfg=api.cfg)
+                     row_block=row_block, compact_every=compact_every,
+                     cfg=api.cfg)

@@ -33,10 +33,10 @@ from repro.core import masks as masks_lib
 from repro.core.warmstart import CRITERIA as _WARMSTARTS
 
 
-def _coerce_t_max(v) -> int:
+def _coerce_int(v, name: str = "t_max") -> int:
     """JSON emitters often write ints as floats (50.0); accept those."""
     if isinstance(v, float) and not v.is_integer():
-        raise ValueError(f"t_max must be an integer, got {v!r}")
+        raise ValueError(f"{name} must be an integer, got {v!r}")
     return int(v)
 
 
@@ -60,6 +60,7 @@ class SiteRule:
     warmstart: str | None = None
     t_max: int | None = None
     eps: float | None = None
+    k_swaps: int | None = None                   # swaps committed per pass
     skip: bool = False
 
     def matches(self, name: str, labels: tuple[str, ...] = ()) -> bool:
@@ -72,7 +73,7 @@ class SiteRule:
         d = {"select": self.select}
         if self.pattern is not None:
             d["pattern"] = masks_lib.format_pattern(self.pattern)
-        for k in ("method", "warmstart", "t_max", "eps"):
+        for k in ("method", "warmstart", "t_max", "eps", "k_swaps"):
             if getattr(self, k) is not None:
                 d[k] = getattr(self, k)
         if self.skip:
@@ -83,7 +84,7 @@ class SiteRule:
     def from_json_dict(cls, d: dict) -> "SiteRule":
         d = dict(d)
         unknown = set(d) - {"select", "pattern", "method", "warmstart",
-                            "t_max", "eps", "skip"}
+                            "t_max", "eps", "k_swaps", "skip"}
         if unknown:
             raise ValueError(f"unknown SiteRule keys {sorted(unknown)}")
         if "pattern" in d:
@@ -91,7 +92,9 @@ class SiteRule:
         if "eps" in d:
             d["eps"] = float(d["eps"])
         if "t_max" in d:
-            d["t_max"] = _coerce_t_max(d["t_max"])
+            d["t_max"] = _coerce_int(d["t_max"])
+        if "k_swaps" in d:
+            d["k_swaps"] = _coerce_int(d["k_swaps"], "k_swaps")
         return cls(**d)
 
 
@@ -106,6 +109,7 @@ class ResolvedRule:
     eps: float
     skip: bool
     selected_by: str | None       # the matching glob, None = defaults
+    k_swaps: int | None = None    # None = auto (sparseswaps._pick_k)
 
     @property
     def pattern_str(self) -> str:
@@ -123,6 +127,7 @@ class PruneRecipe:
     warmstart: str = "wanda"
     t_max: int = 100
     eps: float = 0.0
+    k_swaps: int | None = None    # swaps per search pass; None = auto
 
     def __post_init__(self):
         # tolerate list inputs; keep the dataclass hashable/comparable
@@ -132,10 +137,12 @@ class PruneRecipe:
     @classmethod
     def single(cls, pattern: masks_lib.Pattern | str, *,
                method: str = "sparseswaps", warmstart: str = "wanda",
-               t_max: int = 100, eps: float = 0.0) -> "PruneRecipe":
+               t_max: int = 100, eps: float = 0.0,
+               k_swaps: int | None = None) -> "PruneRecipe":
         """The monolithic ``prune_model`` call as a zero-rule recipe."""
         return cls(rules=(), pattern=masks_lib.parse_pattern(pattern),
-                   method=method, warmstart=warmstart, t_max=t_max, eps=eps)
+                   method=method, warmstart=warmstart, t_max=t_max, eps=eps,
+                   k_swaps=k_swaps)
 
     # -- resolution ---------------------------------------------------------
 
@@ -152,10 +159,13 @@ class PruneRecipe:
                     t_max=self.t_max if rule.t_max is None else rule.t_max,
                     eps=self.eps if rule.eps is None else rule.eps,
                     skip=rule.skip,
-                    selected_by=rule.select)
+                    selected_by=rule.select,
+                    k_swaps=(self.k_swaps if rule.k_swaps is None
+                             else rule.k_swaps))
         return ResolvedRule(pattern=self.pattern, method=self.method,
                             warmstart=self.warmstart, t_max=self.t_max,
-                            eps=self.eps, skip=False, selected_by=None)
+                            eps=self.eps, skip=False, selected_by=None,
+                            k_swaps=self.k_swaps)
 
     def validate(self, specs) -> None:
         """Check the recipe against the model's enumerated sites.
@@ -213,12 +223,18 @@ class PruneRecipe:
                 raise ValueError(
                     f"site {n!r} resolves to unknown warmstart "
                     f"{res.warmstart!r}; have {list(_WARMSTARTS)}")
+            if res.k_swaps is not None and res.k_swaps < 1:
+                raise ValueError(
+                    f"site {n!r} resolves to k_swaps={res.k_swaps}; "
+                    "must be >= 1 (or null for auto)")
 
     # -- serialization ------------------------------------------------------
 
     def to_json(self, *, indent: int | None = 1) -> str:
         defaults = {"method": self.method, "warmstart": self.warmstart,
                     "t_max": self.t_max, "eps": self.eps}
+        if self.k_swaps is not None:
+            defaults["k_swaps"] = self.k_swaps
         if self.pattern is not None:
             defaults["pattern"] = masks_lib.format_pattern(self.pattern)
         return json.dumps(
@@ -234,7 +250,7 @@ class PruneRecipe:
             raise ValueError(f"unknown recipe keys {sorted(unknown)}")
         defaults = dict(data.get("defaults", {}))
         bad = set(defaults) - {"pattern", "method", "warmstart", "t_max",
-                               "eps"}
+                               "eps", "k_swaps"}
         if bad:
             raise ValueError(f"unknown recipe defaults keys {sorted(bad)}")
         if "pattern" in defaults:
@@ -242,7 +258,10 @@ class PruneRecipe:
         if "eps" in defaults:
             defaults["eps"] = float(defaults["eps"])
         if "t_max" in defaults:
-            defaults["t_max"] = _coerce_t_max(defaults["t_max"])
+            defaults["t_max"] = _coerce_int(defaults["t_max"])
+        if "k_swaps" in defaults:
+            defaults["k_swaps"] = _coerce_int(defaults["k_swaps"],
+                                              "k_swaps")
         rules = tuple(SiteRule.from_json_dict(r)
                       for r in data.get("rules", []))
         return cls(rules=rules, **defaults)

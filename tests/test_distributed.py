@@ -64,6 +64,56 @@ def test_g_sharded_matches_reference():
     assert out.count("True") == 2
 
 
+def test_rows_sharded_kswap_matches_reference():
+    """The k-swap step (top-k search + column-rescored commit) sharded
+    over rows is bit-identical to the single-device k-swap loop."""
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import masks, warmstart, sparseswaps
+        from repro.pruning import distributed as dist
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(48, 300)).astype(np.float32)
+        W = rng.normal(size=(32, 48)).astype(np.float32)
+        G = jnp.asarray(X @ X.T)
+        pat = masks.PerRow(0.5)
+        m0 = warmstart.warmstart_mask(jnp.asarray(W), G, pat, "wanda")
+        mesh = jax.make_mesh((8,), ("data",))
+        ref = sparseswaps.refine(jnp.asarray(W), G, m0, pat, t_max=15,
+                                 method="chunked", k_swaps=8)
+        m1, l0, l1 = dist.refine_rows_sharded(jnp.asarray(W), G, m0, pat,
+                                              mesh, t_max=15, k_swaps=8)
+        print("MATCH", bool(jnp.all(m1 == ref.mask)))
+    """)
+    assert "MATCH True" in out
+
+
+def test_g_sharded_kswap_matches_reference():
+    """Gram-sharded k-swap (distributed top-k merge + psum'd column
+    commit) is bit-identical to single-device k-swap on 1-D and 2-D
+    meshes, at k = 1 and k = 8."""
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import masks, warmstart, sparseswaps
+        from repro.pruning import distributed as dist
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(64, 300)).astype(np.float32)
+        W = rng.normal(size=(16, 64)).astype(np.float32)
+        G = jnp.asarray(X @ X.T)
+        pat = masks.PerRow(0.5)
+        m0 = warmstart.warmstart_mask(jnp.asarray(W), G, pat, "wanda")
+        for k in (1, 8):
+            ref = sparseswaps.refine(jnp.asarray(W), G, m0, pat, t_max=12,
+                                     method="chunked", k_swaps=k)
+            for shape, names in [((8,), ("data",)),
+                                 ((4, 2), ("data", "model"))]:
+                mesh = jax.make_mesh(shape, names)
+                m2, _, _ = dist.refine_g_sharded(jnp.asarray(W), G, m0, pat,
+                                                 mesh, t_max=12, k_swaps=k)
+                print("MATCH", k, shape, bool(jnp.all(m2 == ref.mask)))
+    """)
+    assert out.count("True") == 4
+
+
 def test_nm_rows_sharded():
     out = run_py("""
         import numpy as np, jax, jax.numpy as jnp
