@@ -1,0 +1,93 @@
+"""Schema + regression guard for BENCH_serve.json (CI).
+
+    python benchmarks/check_serve_bench.py [path] [--max-nm24-prefill-ratio 2.0]
+
+Asserts the bench doc is machine-readable — one ``prefill`` and one
+``decode`` row per variant, every row carrying the keys downstream
+tooling reads (``kernel_used`` included, so jnp/VMEM fallbacks stay
+visible in the perf trajectory) — and that nm24 prefill has not
+regressed past the given ratio of dense prefill. The default 2.0 is the
+CI guard on the interpret/jnp path; the committed repo-root bench holds
+the tighter 1.5 acceptance ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DOC_KEYS = {"arch", "batch", "prompt_len", "gen", "devices", "rows"}
+ROW_KEYS = {"variant", "phase", "kernel", "kernel_used", "tok_s",
+            "weight_bytes", "pack_s"}
+PHASE_KEYS = {"prefill": {"prefill_s"}, "decode": {"cold_tok_s"}}
+
+
+def check(doc: dict, *, max_nm24_prefill_ratio: float) -> list[str]:
+    errs = []
+    missing = DOC_KEYS - doc.keys()
+    if missing:
+        errs.append(f"doc missing keys {sorted(missing)}")
+        return errs
+    by = {}
+    for i, r in enumerate(doc["rows"]):
+        missing = ROW_KEYS - r.keys()
+        if missing:
+            errs.append(f"row {i} missing keys {sorted(missing)}")
+            continue
+        phase = r["phase"]
+        if phase not in PHASE_KEYS:
+            errs.append(f"row {i}: unknown phase {phase!r}")
+            continue
+        missing = PHASE_KEYS[phase] - r.keys()
+        if missing:
+            errs.append(f"row {i} ({r['variant']}/{phase}) missing "
+                        f"{sorted(missing)}")
+        if not isinstance(r["kernel_used"], str) or not r["kernel_used"]:
+            errs.append(f"row {i} ({r['variant']}/{phase}): kernel_used "
+                        f"must be a non-empty string, got "
+                        f"{r['kernel_used']!r}")
+        if r["tok_s"] <= 0:
+            errs.append(f"row {i} ({r['variant']}/{phase}): tok_s <= 0")
+        key = (r["variant"], phase)
+        if key in by:
+            errs.append(f"duplicate row for {key}")
+        by[key] = r
+    for variant in {r["variant"] for r in doc["rows"]}:
+        for phase in PHASE_KEYS:
+            if (variant, phase) not in by:
+                errs.append(f"missing {phase} row for variant {variant!r}")
+    dense = by.get(("dense", "prefill"))
+    nm24 = by.get(("nm24", "prefill"))
+    if dense and nm24:
+        ratio = nm24["prefill_s"] / dense["prefill_s"]
+        if ratio > max_nm24_prefill_ratio:
+            errs.append(
+                f"nm24 prefill regression: {nm24['prefill_s']*1e3:.2f} ms "
+                f"is {ratio:.2f}x dense ({dense['prefill_s']*1e3:.2f} ms), "
+                f"bound {max_nm24_prefill_ratio:.2f}x")
+    return errs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?",
+                    default=str(ROOT / "BENCH_serve.json"))
+    ap.add_argument("--max-nm24-prefill-ratio", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    doc = json.loads(Path(args.path).read_text())
+    errs = check(doc, max_nm24_prefill_ratio=args.max_nm24_prefill_ratio)
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    n = len(doc["rows"])
+    print(f"ok: {args.path} — {n} rows, schema + nm24 prefill ratio "
+          f"<= {args.max_nm24_prefill_ratio}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,10 @@
 prints the per-(arch x shape x mesh) three-term roofline (DESIGN §7),
 plus the analytic swap-search roofline — bytes moved and FLOPs per
 ACCEPTED swap for the per-iteration argmin path vs the fused top-k
-kernel (``kernels/swap_topk``). The headline metric is G HBM re-reads
+kernel (``kernels/swap_topk``) — plus the serving-kernel table for the
+fused packed spmm (``kernels/spmm``): packed HBM bytes, slot-expansion
+VPU ops, and MXU utilization per tile shape for nm24 vs gathered at
+prefill and decode token counts. The headline metric is G HBM re-reads
 per accepted swap: the argmin path streams the whole d_in² Gram once
 per swap; the k-swap path streams it once per ~A accepted swaps (A =
 accepts/pass) and pays O(R·d) column gathers per accept instead.
@@ -78,6 +81,106 @@ def print_swap_search(rows=None, *, k=8, accepts_per_pass=4.0):
         print(f"{'':25s}-> {g_cut:.2f}x less HBM per accepted swap")
 
 
+def _spmm_plan(T, d_in, K, nm):
+    """The fused spmm kernel's actual tiling plan (kernels/spmm._plan)."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.kernels import spmm
+    plan = spmm._plan(T, d_in, K, nm, tile_t=spmm.TILE_T,
+                      tile_o=spmm.TILE_O, tile_d=spmm.TILE_D,
+                      tile_s=spmm.TILE_S)
+    plan["T"] = T
+    return plan
+
+
+# VPU lanes do ~8x128 fp32 ops/cycle vs the MXU's 2·128·128 flops/cycle:
+# one expansion (masked-add) op costs ~32 dot-flops of machine time.
+_VPU_MXU_RATIO = (2 * 128 * 128) / (8 * 128)
+
+
+def serving_kernel_rows(shapes=((4096, 4096), (14336, 4096),
+                                (4096, 14336)),
+                        *, t_prefill=2048, t_decode=8, nm=(2, 4),
+                        dtype_bytes=2):
+    """Analytic table for the fused packed spmm (kernels/spmm).
+
+    Per (layer shape x format x phase), using the kernel's real tiling
+    plan: packed HBM weight bytes (vs dense), dense-equivalent dot
+    FLOPs, slot-expansion VPU ops, and an MXU-utilization proxy =
+    t_dot / (t_dot + t_expand) with the expansion costed at the VPU:MXU
+    throughput ratio. The structural story the numbers tell:
+
+    * nm24 slots are column-sorted, so each d-tile owns one static slot
+      block — expansion is O(K·TD) per output tile, a d_in/TD-fold
+      saving over gathered's full O(K·d_in) slot x d-tile sweep (the
+      price gathered pays for unstructured masks, growing with d_in);
+    * nm24 packs 2:4 at (dtype + 1 meta byte) per kept value — below
+      dense bytes; gathered's int32 columns cost 4 B/kept, so its
+      packed stream only beats dense at fp32 — its real decode win is
+      compute-side (no densification at tiny T);
+    * prefill amortizes: expansion runs once per (T/TT) token stripe,
+      so expansion ops *per token* drop ~TT-fold from decode to
+      prefill — the same amortization the jnp fallback gets from its
+      scatter-once-then-BLAS prefill path.
+    """
+    n, m = nm
+    rows = []
+    for d_out, d_in in shapes:
+        dense_bytes = d_out * d_in * dtype_bytes
+        for fmt in ("nm24", "gathered"):
+            K = d_in * n // m
+            meta = 1 if fmt == "nm24" else 4        # uint8 idx vs int32 cols
+            packed_bytes = d_out * K * (dtype_bytes + meta)
+            for phase, T in (("prefill", t_prefill), ("decode", t_decode)):
+                p = _spmm_plan(T, d_in, K, nm if fmt == "nm24" else None)
+                n_t = -(-T // p["tile_t"])
+                n_o = -(-d_out // p["tile_o"])
+                n_d = p["Dp"] // p["tile_d"]
+                steps = n_t * n_o * p["n_s"] * n_d
+                expand_ops = steps * p["tile_s"] * p["tile_o"] * p["tile_d"]
+                dot_flops = 2 * T * d_out * p["Dp"]
+                mxu_util = dot_flops / (dot_flops
+                                        + expand_ops * _VPU_MXU_RATIO)
+                rows.append({
+                    "fmt": fmt, "phase": phase, "T": T,
+                    "d_out": d_out, "d_in": d_in,
+                    "tiles": (p["tile_t"], p["tile_o"], p["tile_d"],
+                              p["tile_s"]),
+                    "packed_bytes": packed_bytes,
+                    "bytes_vs_dense": packed_bytes / dense_bytes,
+                    "dot_flops": dot_flops,
+                    "expand_ops": expand_ops,
+                    "expand_per_tok": expand_ops / T,
+                    "mxu_util": mxu_util,
+                })
+    return rows
+
+
+def print_serving_kernels(rows=None, **kw):
+    if rows is None:
+        rows = serving_kernel_rows(**kw)
+    print("\n=== fused packed spmm (serving kernels, bf16 values, "
+          "2:4) ===")
+    print(f"{'layer':>12s} {'fmt':>9s} {'phase':>8s} "
+          f"{'(TT,TO,TD,TS)':>18s} {'pack MiB':>9s} {'vs dense':>9s} "
+          f"{'dot GF':>8s} {'exp Mop':>9s} {'exp/tok':>9s} {'MXU%':>6s}")
+    for r in rows:
+        shp = f"{r['d_out']}x{r['d_in']}"
+        print(f"{shp:>12s} {r['fmt']:>9s} {r['phase']:>8s} "
+              f"{str(r['tiles']):>18s} {r['packed_bytes']/2**20:9.1f} "
+              f"{r['bytes_vs_dense']:9.2f} {r['dot_flops']/1e9:8.2f} "
+              f"{r['expand_ops']/1e6:9.1f} {r['expand_per_tok']/1e6:8.2f}M "
+              f"{100*r['mxu_util']:5.1f}%")
+    print("  -> nm24: aligned slot blocks cut expansion to O(K·TD)/tile "
+          "(d_in/TD fewer ops than gathered) and pack below dense bytes.\n"
+          "  -> gathered: O(K·d_in) slot sweep + 4B int32 columns — pays "
+          "VPU time and bytes for unstructured masks; its decode win is "
+          "avoiding densification at tiny T.\n"
+          "  -> prefill amortizes expansion ~TT-fold per token (exp/tok "
+          "column): the stripe-resident sub-tiles pay once per TT "
+          "tokens.")
+
+
 def load(mesh: str) -> list[dict]:
     d = DRYRUN / mesh
     if not d.exists():
@@ -123,6 +226,9 @@ def run(verbose: bool = True) -> dict:
     out["swap_search"] = swap_search_rows()
     if verbose:
         print_swap_search(out["swap_search"])
+    out["serving_kernels"] = serving_kernel_rows()
+    if verbose:
+        print_serving_kernels(out["serving_kernels"])
     return out
 
 

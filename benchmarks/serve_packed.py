@@ -11,11 +11,13 @@ weight format the runtime supports:
   ``kernels.spmm.spmm_nm24``;
 * ``gathered`` — per-row kept-column gather via ``spmm_gather``.
 
-Emits ``BENCH_serve.json`` at the repo root (cold_tok_s includes
-compilation; tok_s is the best warm repeat; weight_bytes is what the
+Emits ``BENCH_serve.json`` at the repo root (or ``--out``): one prefill
+row and one decode row per format, each tagged with the kernel the
+trace actually lowered (``kernel_used``; cold_tok_s includes
+compilation, tok_s is the best warm repeat, weight_bytes is what the
 engine actually keeps resident). Run with a bigger ``--batch``/``--gen``
-for steadier numbers; on TPU the packed rows lower through the Pallas
-expand-in-VMEM kernels instead of the jnp fallback timed here.
+for steadier numbers; on TPU the packed rows lower through the fused
+Pallas spmm kernels instead of the jnp fallback timed here.
 """
 from __future__ import annotations
 
@@ -31,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--t-max", type=int, default=20)
+    ap.add_argument("--n-calib", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help="write the bench json here instead of the repo "
+                         "root (CI smoke)")
     args = ap.parse_args(argv)
 
     from repro.launch.prune import prune
@@ -39,11 +45,12 @@ def main(argv=None):
     with tempfile.TemporaryDirectory() as td:
         print(f"pruning {args.arch} (tiny) to 2:4, t_max={args.t_max} ...")
         prune(args.arch, tiny=True, pattern="2:4", method="sparseswaps",
-              t_max=args.t_max, n_calib=8, calib_seq=64,
+              t_max=args.t_max, n_calib=args.n_calib, calib_seq=64,
               out_dir=td, verbose=False)
         serve(args.arch, tiny=True, batch=args.batch,
               prompt_len=args.prompt_len, gen=args.gen, masks_from=td,
-              fmt="masked", bench=True)
+              fmt="masked", bench=True,
+              bench_out=Path(args.out) if args.out else None)
 
 
 if __name__ == "__main__":

@@ -18,8 +18,10 @@ checkpoint dir (``groups/<site>/step_*``), a masks-tree checkpoint, or
 the launcher ``--out-dir`` root. ``--format`` picks the weight
 representation (dense / masked / nm24 / gathered), ``--kernel`` the
 spmm path (auto = Pallas on TPU, jnp elsewhere). ``--bench`` times
-dense vs masked-dense vs packed and writes ``BENCH_serve.json`` rows
-(tok/s + resident weight bytes) at the repo root.
+dense vs masked-dense vs packed and writes ``BENCH_serve.json`` at the
+repo root — one prefill row and one decode row per format, each with
+the kernel the trace actually lowered (``kernel_used``), decode/prefill
+tok/s, and resident weight bytes.
 """
 from __future__ import annotations
 
@@ -104,7 +106,12 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
         out["bench"] = rows
         if verbose:
             for r in rows:
-                print(f"  {r['variant']:8s} {r['tok_s']:8.1f} tok/s  "
+                extra = (f"prefill {r['prefill_s']*1e3:7.2f} ms"
+                         if r["phase"] == "prefill" else
+                         f"cold {r['cold_tok_s']:8.1f} tok/s")
+                print(f"  {r['variant']:8s} {r['phase']:7s} "
+                      f"{r['tok_s']:9.1f} tok/s  {extra}  "
+                      f"[{r['kernel_used']}]  "
                       f"{r['weight_bytes']/2**20:8.2f} MiB")
             print(f"wrote {path}")
     return out
@@ -144,12 +151,16 @@ def main(argv=None):
     ap.add_argument("--bench", action="store_true",
                     help="time dense vs masked vs packed; write "
                          "BENCH_serve.json")
+    ap.add_argument("--bench-out", default=None,
+                    help="where --bench writes its rows (default: the "
+                         "repo-root BENCH_serve.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.arch, tiny=args.tiny, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,
           masks_from=args.masks_from, fmt=args.format, kernel=args.kernel,
-          mesh=args.mesh, seed=args.seed, bench=args.bench)
+          mesh=args.mesh, seed=args.seed, bench=args.bench,
+          bench_out=Path(args.bench_out) if args.bench_out else None)
 
 
 if __name__ == "__main__":

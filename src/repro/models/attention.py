@@ -83,18 +83,16 @@ PRUNABLE_ATTN = ("wq", "wk", "wv", "wo")
 # ---------------------------------------------------------------------------
 
 def _proj_q(p, x, cfg, masks, taps):
-    q = dense(x, p["wq"], mask=_m(masks, "wq"), tap="wq", taps=taps)
-    if "bq" in p:
-        q = q + p["bq"].astype(q.dtype)
+    q = dense(x, p["wq"], mask=_m(masks, "wq"), tap="wq", taps=taps,
+              bias=p.get("bq"))
     return q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
 
 
 def _proj_kv(p, x, cfg, masks, taps):
-    k = dense(x, p["wk"], mask=_m(masks, "wk"), tap="wk", taps=taps)
-    v = dense(x, p["wv"], mask=_m(masks, "wv"), tap="wv", taps=taps)
-    if "bk" in p:
-        k = k + p["bk"].astype(k.dtype)
-        v = v + p["bv"].astype(v.dtype)
+    k = dense(x, p["wk"], mask=_m(masks, "wk"), tap="wk", taps=taps,
+              bias=p.get("bk"))
+    v = dense(x, p["wv"], mask=_m(masks, "wv"), tap="wv", taps=taps,
+              bias=p.get("bv"))
     kvh = cfg.n_kv_heads
     k = k.reshape(*x.shape[:-1], kvh, cfg.head_dim)
     v = v.reshape(*x.shape[:-1], kvh, cfg.head_dim)

@@ -138,6 +138,21 @@ def zero_tap_entry(name: str, d: int) -> dict:
 # matmul policy (pluggable serving execution path)
 # ---------------------------------------------------------------------------
 
+def apply_epilogue(y: jnp.ndarray, bias=None,
+                   act: str | None = None) -> jnp.ndarray:
+    """``act(y + bias)`` — the reference (unfused) matmul epilogue.
+
+    ``act`` keys come from ``kernels.spmm.EPILOGUES`` (a superset of
+    ``ACTS``); the fused packed kernels compute exactly this on their
+    fp32 accumulator.
+    """
+    from repro.kernels.spmm import EPILOGUES
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if act is not None:
+        y = EPILOGUES[act](y)
+    return y
+
 class MatmulPolicy:
     """Decides how a prunable linear *executes*, mirroring ``TapPolicy``.
 
@@ -151,7 +166,17 @@ class MatmulPolicy:
     * packed — when a param leaf is a ``core.packed.PackedWeight`` the
       policy's ``packed_matmul`` runs it through the sparse kernels
       (``kernels.spmm``); ``kernel`` selects pallas/jnp (``"auto"`` =
-      Pallas on TPU, take-along-columns jnp elsewhere).
+      Pallas on TPU, the phase-aware jnp fallback elsewhere).
+
+    Every path takes an optional fused epilogue — ``bias`` (a (d_out,)
+    array or None) and ``act`` (a ``kernels.spmm.EPILOGUES`` key or
+    None), applied as ``act(y + bias)``. On the packed Pallas path the
+    epilogue runs in-kernel on the fp32 accumulator, so the
+    pre-activation never round-trips through HBM between the spmm and
+    the nonlinearity; the dense path applies it inline (XLA fuses it).
+    ``fuse_epilogue = False`` turns the knob off: ``dense`` then applies
+    the identical ``act(y + bias)`` *outside* the policy — the unfused
+    reference the parity tests compare against.
 
     Policies are consulted at *trace* time (install with
     ``use_matmul_policy`` around the jit; re-jit per policy), exactly
@@ -159,29 +184,35 @@ class MatmulPolicy:
     """
 
     kernel: str = "auto"
+    fuse_epilogue: bool = True
 
     def matmul(self, x: jnp.ndarray, w: jnp.ndarray,
-               mask: jnp.ndarray | None) -> jnp.ndarray:
+               mask: jnp.ndarray | None, *, bias=None,
+               act: str | None = None) -> jnp.ndarray:
         if mask is not None:
             w = w * mask.astype(w.dtype)
-        return x @ w.T.astype(x.dtype)
+        return apply_epilogue(x @ w.T.astype(x.dtype), bias, act)
 
-    def packed_matmul(self, x: jnp.ndarray, pw: PackedWeight) -> jnp.ndarray:
+    def packed_matmul(self, x: jnp.ndarray, pw: PackedWeight, *,
+                      bias=None, act: str | None = None) -> jnp.ndarray:
         from repro.kernels import spmm
-        return spmm.spmm(x, pw, kernel=self.kernel)
+        return spmm.spmm(x, pw, kernel=self.kernel, bias=bias, act=act)
 
-    def packed_matmul_stacked(self, x: jnp.ndarray,
-                              pw: PackedWeight) -> jnp.ndarray:
+    def packed_matmul_stacked(self, x: jnp.ndarray, pw: PackedWeight, *,
+                              bias=None, act: str | None = None
+                              ) -> jnp.ndarray:
         """Per-instance variant for stacked leaves (MoE experts)."""
         from repro.kernels import spmm
-        return spmm.spmm_stacked(x, pw, kernel=self.kernel)
+        return spmm.spmm_stacked(x, pw, kernel=self.kernel, bias=bias,
+                                 act=act)
 
 
 class PackedMatmulPolicy(MatmulPolicy):
-    """A ``MatmulPolicy`` with an explicit kernel choice for packed leaves."""
+    """A ``MatmulPolicy`` with an explicit kernel/epilogue choice."""
 
-    def __init__(self, kernel: str = "auto"):
+    def __init__(self, kernel: str = "auto", fuse_epilogue: bool = True):
         self.kernel = kernel
+        self.fuse_epilogue = fuse_epilogue
 
 
 DEFAULT_MATMUL_POLICY = MatmulPolicy()
@@ -228,8 +259,10 @@ def dense(
     mask: jnp.ndarray | None = None,
     tap: str | None = None,
     taps: Taps | None = None,
+    bias: jnp.ndarray | None = None,
+    act: str | None = None,
 ) -> jnp.ndarray:
-    """y = x @ ((mask ⊙ w)ᵀ). x: (..., d_in), w: (d_out, d_in).
+    """y = act(x @ ((mask ⊙ w)ᵀ) + bias). x: (..., d_in), w: (d_out, d_in).
 
     When ``taps`` is a dict and ``tap`` a name, accumulates the
     statistics the active ``TapPolicy`` selects for x into taps[tap]
@@ -238,17 +271,23 @@ def dense(
     Execution is delegated to the active ``MatmulPolicy``: a
     ``PackedWeight`` leaf (serving a packed sparse export) dispatches to
     the spmm kernels — ``mask`` must then be ``None``, the mask is baked
-    into the packing.
+    into the packing. ``bias``/``act`` are the fused epilogue — handed
+    to the policy when it fuses (in-kernel on the packed Pallas path),
+    applied here as the identical ``act(y + bias)`` when it doesn't.
     """
     if taps is not None and tap is not None:
         emit_tap(taps, tap, x)
     pol = _matmul_policy
+    fused = pol.fuse_epilogue
+    eb, ea = (bias, act) if fused else (None, None)
     if isinstance(w, PackedWeight):
         if mask is not None:
             raise ValueError("PackedWeight already encodes its mask; "
                              "serve packed params with masks=None")
-        return pol.packed_matmul(x, w)
-    return pol.matmul(x, w, mask)
+        y = pol.packed_matmul(x, w, bias=eb, act=ea)
+    else:
+        y = pol.matmul(x, w, mask, bias=eb, act=ea)
+    return y if fused else apply_epilogue(y, bias, act)
 
 
 # ---------------------------------------------------------------------------

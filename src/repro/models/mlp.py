@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.dist.sharding import constrain
 
 from . import common
-from .common import ACTS, dense
+from .common import dense
 
 
 def init_mlp_params(key, cfg, *, d_in: int | None = None) -> dict:
@@ -30,13 +30,18 @@ PRUNABLE_MLP = ("w_gate", "w_up", "w_down")
 
 
 def mlp_block(p, x, cfg, *, masks=None, taps=None) -> jnp.ndarray:
-    act = ACTS[cfg.act]
+    """Gated/plain MLP. The nonlinearity rides the gate/up matmul as a
+    fused epilogue (``dense(act=...)``) so packed serving never writes
+    the pre-activation back to HBM; the unfused policy path computes the
+    identical ``act(x @ wᵀ)``."""
     m = (lambda n: None) if masks is None else masks.get
-    up = dense(x, p["w_up"], mask=m("w_up"), tap="w_up", taps=taps)
     if "w_gate" in p:
-        gate = dense(x, p["w_gate"], mask=m("w_gate"), tap="w_gate", taps=taps)
-        h = act(gate) * up
+        up = dense(x, p["w_up"], mask=m("w_up"), tap="w_up", taps=taps)
+        gate = dense(x, p["w_gate"], mask=m("w_gate"), tap="w_gate",
+                     taps=taps, act=cfg.act)
+        h = gate * up
     else:
-        h = act(up)
+        h = dense(x, p["w_up"], mask=m("w_up"), tap="w_up", taps=taps,
+                  act=cfg.act)
     h = constrain(h, "batch", None, "mlp")
     return dense(h, p["w_down"], mask=m("w_down"), tap="w_down", taps=taps)

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from repro.dist.sharding import constrain
 
 from . import common
-from .common import ACTS, dense
 
 
 def init_moe_params(key, cfg) -> dict:
@@ -123,10 +122,9 @@ def moe_block(p, x, cfg, *, masks=None, taps=None):
         b32 = buf.astype(jnp.float32)
         _tap_add(taps, "moe_w_up", _moe_tap_entry(pol, f_up, b32, n_e))
 
-    act = ACTS[cfg.act]
     up = _expert_mm(buf, p["w_up"], m("w_up"))
-    gate = _expert_mm(buf, p["w_gate"], m("w_gate"))
-    h = act(gate) * up
+    gate = _expert_mm(buf, p["w_gate"], m("w_gate"), act=cfg.act)
+    h = gate * up
     # seq-sharded groups already parallelize expert compute over the model
     # axis via tokens — the f dim must NOT also map to "model" (one mesh
     # axis can appear once per spec).
@@ -158,25 +156,32 @@ def _masked(w, mask):
     return w if mask is None else w * mask.astype(w.dtype)
 
 
-def _expert_mm(x5, w, mask):
+def _expert_mm(x5, w, mask, act=None):
     """Per-expert contraction: (B, ng, E, C, d) · (E, f, d) -> (B, ng, E, C, f).
 
     The MoE analogue of ``common.dense``'s execution dispatch: a
     ``PackedWeight`` leaf (stacked on the expert dim) routes through the
     active ``MatmulPolicy``'s stacked spmm; dense/masked weights stay on
-    the fused einsum.
+    the fused einsum. ``act`` is the fused epilogue (gate nonlinearity)
+    — in-kernel on the packed path, inline on the einsum path, or
+    applied unfused when the policy opts out.
     """
+    pol = common.matmul_policy()
+    ea = act if pol.fuse_epilogue else None
     if isinstance(w, common.PackedWeight):
         if mask is not None:
             raise ValueError("PackedWeight already encodes its mask; "
                              "serve packed params with masks=None")
         B, ng, e, cap, d = x5.shape
         xe = x5.transpose(2, 0, 1, 3, 4).reshape(e, B * ng * cap, d)
-        ye = common.matmul_policy().packed_matmul_stacked(xe, w)
+        ye = pol.packed_matmul_stacked(xe, w, act=ea)
         ye = ye.reshape(e, B, ng, cap, -1)
-        return ye.transpose(1, 2, 0, 3, 4)
-    w = _masked(w, mask)
-    return jnp.einsum("bnecd,efd->bnecf", x5, w.astype(x5.dtype))
+        y = ye.transpose(1, 2, 0, 3, 4)
+    else:
+        w = _masked(w, mask)
+        y = jnp.einsum("bnecd,efd->bnecf", x5, w.astype(x5.dtype))
+        y = common.apply_epilogue(y, None, ea)
+    return y if ea is act else common.apply_epilogue(y, None, act)
 
 
 def _tap_add(taps, name, ent):

@@ -208,7 +208,7 @@ def time_mix(p, x, cfg, *, masks=None, taps=None, cache: RWKVCache | None = None
     r = dense(xr, p["wr"], mask=m("wr"), tap="wr", taps=taps)
     k = dense(xk, p["wk"], mask=m("wk"), tap="wk", taps=taps)
     v = dense(xv, p["wv"], mask=m("wv"), tap="wv", taps=taps)
-    g = jax.nn.silu(dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps))
+    g = dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps, act="silu")
     logw = _decay(p, xw, masks=masks, taps=taps)
     B, S, D = x.shape
     shp = (B, S, H, dh)
@@ -228,8 +228,8 @@ def channel_mix(p, x, cfg, *, masks=None, taps=None, x_prev=None):
     dx = (sx - x).astype(jnp.float32)
     xk = (x.astype(jnp.float32) + dx * p["cm_maa_k"]).astype(x.dtype)
     xr = (x.astype(jnp.float32) + dx * p["cm_maa_r"]).astype(x.dtype)
-    k = dense(xk, p["cm_wk"], mask=m("cm_wk"), tap="cm_wk", taps=taps)
-    k = common.relu2(k)
+    k = dense(xk, p["cm_wk"], mask=m("cm_wk"), tap="cm_wk", taps=taps,
+              act="relu2")
     kv = dense(k, p["cm_wv"], mask=m("cm_wv"), tap="cm_wv", taps=taps)
     rgate = jax.nn.sigmoid(
         dense(xr, p["cm_wr"], mask=m("cm_wr"), tap="cm_wr", taps=taps).astype(jnp.float32))
@@ -245,7 +245,7 @@ def time_mix_decode(p, x_t, cache: RWKVCache, cfg, *, masks=None, taps=None):
     r = dense(xr, p["wr"], mask=m("wr"), tap="wr", taps=taps)
     k = dense(xk, p["wk"], mask=m("wk"), tap="wk", taps=taps)
     v = dense(xv, p["wv"], mask=m("wv"), tap="wv", taps=taps)
-    g = jax.nn.silu(dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps))
+    g = dense(xg, p["wg"], mask=m("wg"), tap="wg", taps=taps, act="silu")
     logw = _decay(p, xw, masks=masks, taps=taps)
     B = x_t.shape[0]
     shp = (B, H, dh)

@@ -22,7 +22,10 @@ TPU and the take-along-columns jnp path elsewhere (the Pallas kernels
 run under interpret off-TPU when forced).
 
 ``bench_rows`` emits the ``BENCH_serve.json`` rows the launcher writes:
-dense vs masked-dense vs packed tok/s plus resident weight bytes.
+separate prefill and decode rows per format (dense vs masked-dense vs
+packed), each tagged with the kernel the trace actually lowered
+(``kernel_used``) so jnp/VMEM fallbacks show up in the perf trajectory
+instead of hiding inside an aggregate tok/s.
 """
 from __future__ import annotations
 
@@ -36,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import packed as packed_lib
 from repro.dist import specs as specs_lib
+from repro.kernels import spmm
 from repro.models import ModelApi, common
 
 FORMATS = ("dense", "masked", "nm24", "gathered")
@@ -112,6 +116,10 @@ class ServeEngine:
         self.pack_s = time.time() - t0
         self._policy = common.PackedMatmulPolicy(kernel)
         self._steps = None              # (prefill, decode) jits, built once
+        self._scans: dict = {}          # (n_steps, want_logits) -> jit
+        # per-phase kernel actually lowered at trace time ("dense" for the
+        # unpacked formats, else e.g. "jnp" / "pallas" / "jnp(vmem)")
+        self.kernel_used: dict = {}
 
         if mesh is not None:
             pspecs = specs_lib.param_pspecs(self.cfg, self.params, mesh)
@@ -166,6 +174,38 @@ class ServeEngine:
                                                      masks=self.masks)
         return self._steps
 
+    def _decode_scan(self, n_steps: int, want_logits: bool):
+        """One jitted ``lax.scan`` over the whole greedy decode loop.
+
+        A Python decode loop pays one dispatch (pytree flatten + device
+        round-trip) per token; at serving batch sizes that fixed cost
+        swamps the per-step matmul work and buries the packed-kernel
+        advantage in noise. Scanning the step in-graph makes decode a
+        single dispatch for all ``n_steps`` tokens — what the timed
+        phase should measure. Compiled once per (n_steps, want_logits)
+        and cached on the engine like the prefill/decode jits.
+        """
+        key = (n_steps, want_logits)
+        if key not in self._scans:
+            _, decode = self._serve_steps()
+
+            def run(params, tok0, cache):
+                def step(carry, _):
+                    tok, cache = carry
+                    logits, cache = decode(params, tok[:, None], cache)
+                    nxt = jnp.argmax(logits[:, -1],
+                                     axis=-1).astype(jnp.int32)
+                    out = (nxt, logits[:, -1].astype(jnp.float32)) \
+                        if want_logits else nxt
+                    return (nxt, cache), out
+
+                (_, cache), ys = jax.lax.scan(step, (tok0, cache), None,
+                                              length=n_steps)
+                return ys
+
+            self._scans[key] = jax.jit(run)
+        return self._scans[key]
+
     def _greedy_loop(self, prompt: dict, n_new: int, *,
                      want_logits: bool = False):
         """The one prefill → argmax → decode loop both surfaces consume.
@@ -184,26 +224,45 @@ class ServeEngine:
                     self.mesh, specs_lib.batch_pspecs(self.cfg, prompt,
                                                       self.mesh)))
             cache = self.api.init_cache(self.params, B, S + n_new)
-            prefill, decode = self._serve_steps()
-            steps = [] if want_logits else None
+            prefill, _ = self._serve_steps()
             t0 = time.time()
-            logits, cache = prefill(self.params, prompt, cache)
-            if want_logits:
-                steps.append(logits[:, -1].astype(jnp.float32))
-            toks = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
-            jax.block_until_ready(toks[-1])
+            # dispatch decisions are trace-time constants, so the records
+            # only materialize on the cold (tracing) call of each jit —
+            # warm calls leave the log empty and keep the noted value.
+            with spmm.record_dispatch() as rec_p:
+                logits0, cache = prefill(self.params, prompt, cache)
+            tok0 = jnp.argmax(logits0[:, -1], axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tok0)
             t1 = time.time()
-            for _ in range(n_new - 1):
-                logits, cache = decode(self.params, toks[-1][:, None], cache)
-                if want_logits:
-                    steps.append(logits[:, -1].astype(jnp.float32))
-                toks.append(jnp.argmax(logits[:, -1], axis=-1)
-                            .astype(jnp.int32))
-            out = jnp.stack(toks, axis=1)
+            rec_d: list = []
+            trace = None
+            if n_new > 1:
+                # the whole decode loop is ONE scanned dispatch — the
+                # timed phase measures graph cost, not n_new-1 python
+                # round-trips (see _decode_scan)
+                run = self._decode_scan(n_new - 1, want_logits)
+                with spmm.record_dispatch() as rec_d:
+                    ys = run(self.params, tok0, cache)
+                toks, logit_steps = ys if want_logits else (ys, None)
+                out = jnp.concatenate([tok0[:, None], toks.T], axis=1)
+            else:
+                out, logit_steps = tok0[:, None], None
             jax.block_until_ready(out)
             t2 = time.time()
-        trace = jnp.stack(steps, axis=0) if want_logits else None
+        self._note_kernels("prefill", rec_p)
+        self._note_kernels("decode", rec_d)
+        if want_logits:
+            first = logits0[:, -1].astype(jnp.float32)[None]
+            trace = first if logit_steps is None else \
+                jnp.concatenate([first, logit_steps], axis=0)
         return out, trace, t1 - t0, t2 - t1
+
+    def _note_kernels(self, phase: str, rec: list) -> None:
+        if rec:
+            self.kernel_used[phase] = _kernel_summary(rec)
+        elif phase not in self.kernel_used:
+            # no spmm dispatches traced: dense/masked serve plain matmuls
+            self.kernel_used[phase] = "dense"
 
     def generate(self, prompt: dict, n_new: int) -> ServeResult:
         """Batched prefill + ``n_new`` greedy decode steps, timed."""
@@ -217,32 +276,72 @@ class ServeEngine:
         return self._greedy_loop(prompt, n_new, want_logits=True)[1]
 
 
+def _kernel_summary(rec: list) -> str:
+    """Collapse trace-time dispatch records into one bench-row tag."""
+    names = sorted({r["kernel"] for r in rec})
+    tag = "+".join(names)
+    if any(r["reason"] == "vmem" for r in rec):
+        tag += "(vmem-fallback)"
+    return tag
+
+
 def bench_rows(api: ModelApi, params: dict, masks, prompt: dict,
                n_new: int, *, formats=("dense", "masked", "nm24"),
-               kernel: str = "auto", mesh=None, repeats: int = 2,
+               kernel: str = "auto", mesh=None, repeats: int = 3,
                masked_params: dict | None = None) -> list:
     """Dense vs masked-dense vs packed serving rows for BENCH_serve.json.
 
-    Each row: format, kernel, decode tok/s (best warm repeat), prefill
-    seconds, resident weight bytes, and pack time. The first generate
-    pays compilation (``cold_tok_s``). ``masked_params`` are the weights
-    the masks belong to when they differ from the dense baseline
-    (sparsegpt updates); the dense row always serves ``params``.
+    Each format contributes TWO rows — ``phase == "prefill"`` and
+    ``phase == "decode"`` — so the prefill gap is tracked directly
+    instead of inferred from aggregate tok/s. Shared keys: ``variant``,
+    ``kernel`` (requested), ``kernel_used`` (what the trace actually
+    lowered, per phase — fallbacks are visible here), ``tok_s`` (best
+    warm repeat), ``weight_bytes``, ``pack_s``. Prefill rows add
+    ``prefill_s`` (best warm, tok_s = batch · prompt_len / prefill_s);
+    decode rows add ``cold_tok_s`` (first call, pays compilation).
+    ``masked_params`` are the weights the masks belong to when they
+    differ from the dense baseline (sparsegpt updates); the dense row
+    always serves ``params``.
     """
-    rows = []
+    B, S = prompt["tokens"].shape
+    engines, cold = {}, {}
     for fmt in formats:
         p = params if fmt == "dense" or masked_params is None \
             else masked_params
-        eng = ServeEngine(api, p, masks=masks if fmt != "dense"
-                          else None, fmt=fmt, kernel=kernel, mesh=mesh)
-        results = [eng.generate(prompt, n_new) for _ in range(repeats + 1)]
-        rows.append({
+        engines[fmt] = ServeEngine(api, p, masks=masks if fmt != "dense"
+                                   else None, fmt=fmt, kernel=kernel,
+                                   mesh=mesh)
+        # compile (and record dispatch) up front
+        cold[fmt] = engines[fmt].generate(prompt, n_new)
+    # interleave the timed repeats round-robin across engines so clock
+    # drift (turbo ramp, background load) biases no single variant —
+    # serial per-variant timing systematically favors whichever runs
+    # last on a warming machine
+    warm: dict = {fmt: [] for fmt in formats}
+    for _ in range(repeats):
+        for fmt in formats:
+            warm[fmt].append(engines[fmt].generate(prompt, n_new))
+    rows = []
+    for fmt in formats:
+        eng = engines[fmt]
+        results = [cold[fmt], *warm[fmt]]
+        base = {
             "variant": fmt,
             "kernel": kernel if fmt in ("nm24", "gathered") else "dense",
-            "cold_tok_s": results[0].tok_s,
-            "tok_s": max(r.tok_s for r in results[1:]),
-            "prefill_s": min(r.prefill_s for r in results[1:]),
             "weight_bytes": eng.weight_bytes(),
             "pack_s": eng.pack_s,
+        }
+        prefill_s = min(r.prefill_s for r in results[1:])
+        rows.append({
+            **base, "phase": "prefill",
+            "kernel_used": eng.kernel_used.get("prefill", "dense"),
+            "prefill_s": prefill_s,
+            "tok_s": B * S / max(prefill_s, 1e-9),
+        })
+        rows.append({
+            **base, "phase": "decode",
+            "kernel_used": eng.kernel_used.get("decode", "dense"),
+            "cold_tok_s": results[0].tok_s,
+            "tok_s": max(r.tok_s for r in results[1:]),
         })
     return rows

@@ -201,15 +201,81 @@ def test_engine_error_paths():
         ServeEngine(api, params, fmt="nm24")
 
 
-def test_bench_rows_report_bytes_and_throughput():
+def test_bench_rows_per_phase_schema():
+    """One prefill + one decode row per variant, kernel_used recorded,
+    and the whole doc passes the CI schema guard
+    (benchmarks/check_serve_bench.py)."""
     cfg, api, params, rep, prompt = _setup("llama31-8b", masks_lib.NM(2, 4))
     rows = bench_rows(api, params, rep, prompt, 3,
                       formats=("dense", "masked", "nm24"), kernel="jnp",
                       repeats=1)
-    by = {r["variant"]: r for r in rows}
-    assert set(by) == {"dense", "masked", "nm24"}
-    assert by["nm24"]["weight_bytes"] < by["masked"]["weight_bytes"]
+    by = {(r["variant"], r["phase"]): r for r in rows}
+    assert set(by) == {(v, p) for v in ("dense", "masked", "nm24")
+                       for p in ("prefill", "decode")}
+    assert by[("nm24", "prefill")]["weight_bytes"] < \
+        by[("masked", "prefill")]["weight_bytes"]
     assert all(r["tok_s"] > 0 for r in rows)
+    assert "prefill_s" in by[("nm24", "prefill")]
+    assert "cold_tok_s" in by[("nm24", "decode")]
+    # packed variants record the spmm kernel that actually served them;
+    # dense/masked serve plain matmuls
+    assert by[("nm24", "prefill")]["kernel_used"] == "jnp"
+    assert by[("nm24", "decode")]["kernel_used"] == "jnp"
+    assert by[("dense", "decode")]["kernel_used"] == "dense"
+    # the committed-bench guard accepts the schema (ratio check included
+    # — jnp nm24 prefill must stay within 50x here only to catch gross
+    # wiring breakage, not a perf bound at tiny test shapes)
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_serve_bench",
+        Path(__file__).resolve().parents[1] / "benchmarks"
+        / "check_serve_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    doc = {"arch": cfg.name, "batch": 2, "prompt_len": 8, "gen": 3,
+           "devices": 1, "rows": rows}
+    assert mod.check(doc, max_nm24_prefill_ratio=50.0) == []
+    # and a malformed doc is caught
+    bad = dict(doc, rows=[dict(rows[0], kernel_used="")])
+    assert mod.check(bad, max_nm24_prefill_ratio=50.0)
+
+
+def test_prefill_decode_logits_consistent():
+    """The scanned decode loop agrees with prefill: re-prefilling the
+    prompt extended by the generated tokens reproduces the per-step
+    decode logits (KV-cache parity), and generate()'s tokens are the
+    argmax of the trace."""
+    cfg, api, params, rep, prompt = _setup("llama31-8b", masks_lib.NM(2, 4))
+    n_new = 5
+    eng = ServeEngine(api, params, masks=rep, fmt="nm24")
+    trace = np.asarray(eng.logits_trace(prompt, n_new))   # (n_new, B, V)
+    toks = np.asarray(eng.generate(prompt, n_new).tokens)  # (B, n_new)
+    np.testing.assert_array_equal(toks, trace.argmax(-1).T)
+    # deterministic: a second trace is bitwise identical
+    np.testing.assert_array_equal(
+        np.asarray(eng.logits_trace(prompt, n_new)), trace)
+    # teacher-forced prefills: re-prefilling the prompt extended by the
+    # first i generated tokens must land on the logits decode step i
+    # produced (prefill returns only the last position). allclose, not
+    # bitwise — XLA schedules the (B, S+i) prefill matmuls differently
+    # from the (B, 1) decode steps, so fp32 reductions legitimately
+    # differ in the lsb.
+    from repro.train import steps as steps_lib
+    from repro.models import common
+    ptoks = np.asarray(prompt["tokens"])
+    B, S = ptoks.shape
+    with common.use_matmul_policy(common.PackedMatmulPolicy("jnp")):
+        eng2 = ServeEngine(api, params, masks=rep, fmt="nm24")
+        prefill, _ = steps_lib.make_serve_steps(api, masks=eng2.masks)
+        for i in range(n_new):
+            ext = dict(prompt)
+            ext["tokens"] = np.concatenate([ptoks, toks[:, :i]], axis=1)
+            ext["labels"] = np.zeros_like(ext["tokens"])
+            cache = api.init_cache(eng2.params, B, S + i)
+            logits, _ = prefill(eng2.params, ext, cache)
+            np.testing.assert_allclose(
+                np.asarray(logits[:, -1], np.float32), trace[i],
+                atol=1e-4, rtol=1e-4, err_msg=f"step {i}")
 
 
 @pytest.mark.parametrize("arch", ["rwkv6-1.6b", "seamless-m4t-medium",
