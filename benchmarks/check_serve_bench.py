@@ -1,14 +1,25 @@
 """Schema + regression guard for BENCH_serve.json (CI).
 
-    python benchmarks/check_serve_bench.py [path] [--max-nm24-prefill-ratio 2.0]
+    python benchmarks/check_serve_bench.py [path] \
+        [--max-nm24-prefill-ratio 2.0] [--require-continuous-wins]
 
 Asserts the bench doc is machine-readable — one ``prefill`` and one
-``decode`` row per variant, every row carrying the keys downstream
-tooling reads (``kernel_used`` included, so jnp/VMEM fallbacks stay
-visible in the perf trajectory) — and that nm24 prefill has not
-regressed past the given ratio of dense prefill. The default 2.0 is the
-CI guard on the interpret/jnp path; the committed repo-root bench holds
-the tighter 1.5 acceptance ratio.
+``decode`` row per per-phase variant, every row carrying the keys
+downstream tooling reads (``kernel_used`` included, so jnp/VMEM
+fallbacks stay visible in the perf trajectory) — and that nm24 prefill
+has not regressed past the given ratio of dense prefill. The default
+2.0 is the CI guard on the interpret/jnp path; the committed repo-root
+bench holds the tighter 1.5 acceptance ratio.
+
+``phase == "load"`` rows (the ``serve_load.py`` arrival-rate sweep) are
+validated separately: p50/p99 TTFT and per-token latency present and
+ordered, goodput ≤ offered load (an accounting invariant — delivered
+tokens can never exceed requested tokens over the same makespan), and
+``kernel_used`` tagged. ``--require-continuous-wins`` additionally
+demands that wherever a (variant, arrival_rate) pair carries both
+modes, continuous batching's goodput strictly beats the fixed-batch
+path — the acceptance bar for the committed run, off by default for CI
+smoke regenerations where timing variance is real.
 """
 from __future__ import annotations
 
@@ -23,21 +34,60 @@ DOC_KEYS = {"arch", "batch", "prompt_len", "gen", "devices", "rows"}
 ROW_KEYS = {"variant", "phase", "kernel", "kernel_used", "tok_s",
             "weight_bytes", "pack_s"}
 PHASE_KEYS = {"prefill": {"prefill_s"}, "decode": {"cold_tok_s"}}
+LOAD_KEYS = {"mode", "arrival_rate", "duration_s", "seed", "n_requests",
+             "completed", "makespan_s", "offered_tok_s", "goodput_tok_s",
+             "p50_ttft_s", "p99_ttft_s", "p50_tok_latency_s",
+             "p99_tok_latency_s"}
+LOAD_MODES = {"continuous", "fixed"}
 
 
-def check(doc: dict, *, max_nm24_prefill_ratio: float) -> list[str]:
+def _check_load_row(i: int, r: dict, errs: list) -> None:
+    missing = LOAD_KEYS - r.keys()
+    if missing:
+        errs.append(f"load row {i} missing {sorted(missing)}")
+        return
+    tag = f"load row {i} ({r['variant']}/{r['mode']}@{r['arrival_rate']})"
+    if r["mode"] not in LOAD_MODES:
+        errs.append(f"{tag}: unknown mode {r['mode']!r}")
+    if r["completed"] > r["n_requests"]:
+        errs.append(f"{tag}: completed > n_requests")
+    if r["goodput_tok_s"] > r["offered_tok_s"] * (1 + 1e-9):
+        errs.append(f"{tag}: goodput {r['goodput_tok_s']:.1f} tok/s "
+                    f"exceeds offered load {r['offered_tok_s']:.1f}")
+    for a, b in (("p50_ttft_s", "p99_ttft_s"),
+                 ("p50_tok_latency_s", "p99_tok_latency_s")):
+        if r[a] < 0 or r[b] < r[a]:
+            errs.append(f"{tag}: want 0 <= {a} <= {b}, got "
+                        f"{r[a]:.4f} / {r[b]:.4f}")
+
+
+def check(doc: dict, *, max_nm24_prefill_ratio: float,
+          require_continuous_wins: bool = False) -> list[str]:
     errs = []
     missing = DOC_KEYS - doc.keys()
     if missing:
         errs.append(f"doc missing keys {sorted(missing)}")
         return errs
-    by = {}
+    by, load_by = {}, {}
     for i, r in enumerate(doc["rows"]):
         missing = ROW_KEYS - r.keys()
         if missing:
             errs.append(f"row {i} missing keys {sorted(missing)}")
             continue
         phase = r["phase"]
+        if not isinstance(r["kernel_used"], str) or not r["kernel_used"]:
+            errs.append(f"row {i} ({r['variant']}/{phase}): kernel_used "
+                        f"must be a non-empty string, got "
+                        f"{r['kernel_used']!r}")
+        if r["tok_s"] <= 0:
+            errs.append(f"row {i} ({r['variant']}/{phase}): tok_s <= 0")
+        if phase == "load":
+            _check_load_row(i, r, errs)
+            key = (r["variant"], r.get("mode"), r.get("arrival_rate"))
+            if key in load_by:
+                errs.append(f"duplicate load row for {key}")
+            load_by[key] = r
+            continue
         if phase not in PHASE_KEYS:
             errs.append(f"row {i}: unknown phase {phase!r}")
             continue
@@ -45,17 +95,13 @@ def check(doc: dict, *, max_nm24_prefill_ratio: float) -> list[str]:
         if missing:
             errs.append(f"row {i} ({r['variant']}/{phase}) missing "
                         f"{sorted(missing)}")
-        if not isinstance(r["kernel_used"], str) or not r["kernel_used"]:
-            errs.append(f"row {i} ({r['variant']}/{phase}): kernel_used "
-                        f"must be a non-empty string, got "
-                        f"{r['kernel_used']!r}")
-        if r["tok_s"] <= 0:
-            errs.append(f"row {i} ({r['variant']}/{phase}): tok_s <= 0")
         key = (r["variant"], phase)
         if key in by:
             errs.append(f"duplicate row for {key}")
         by[key] = r
-    for variant in {r["variant"] for r in doc["rows"]}:
+    # per-phase completeness applies to variants with per-phase rows —
+    # a doc may carry load rows for variants it never phase-timed
+    for variant in {v for v, _ in by}:
         for phase in PHASE_KEYS:
             if (variant, phase) not in by:
                 errs.append(f"missing {phase} row for variant {variant!r}")
@@ -68,6 +114,21 @@ def check(doc: dict, *, max_nm24_prefill_ratio: float) -> list[str]:
                 f"nm24 prefill regression: {nm24['prefill_s']*1e3:.2f} ms "
                 f"is {ratio:.2f}x dense ({dense['prefill_s']*1e3:.2f} ms), "
                 f"bound {max_nm24_prefill_ratio:.2f}x")
+    if require_continuous_wins:
+        pairs = {(v, r) for v, m, r in load_by}
+        if not pairs:
+            errs.append("--require-continuous-wins: no load rows in doc")
+        for v, rate in sorted(pairs):
+            cont = load_by.get((v, "continuous", rate))
+            fixed = load_by.get((v, "fixed", rate))
+            if cont is None or fixed is None:
+                errs.append(f"load sweep for {v!r}@{rate}: need both "
+                            "continuous and fixed rows")
+            elif cont["goodput_tok_s"] <= fixed["goodput_tok_s"]:
+                errs.append(
+                    f"continuous batching does not win for {v!r}@{rate}: "
+                    f"{cont['goodput_tok_s']:.1f} <= "
+                    f"{fixed['goodput_tok_s']:.1f} tok/s goodput")
     return errs
 
 
@@ -76,16 +137,22 @@ def main(argv=None):
     ap.add_argument("path", nargs="?",
                     default=str(ROOT / "BENCH_serve.json"))
     ap.add_argument("--max-nm24-prefill-ratio", type=float, default=2.0)
+    ap.add_argument("--require-continuous-wins", action="store_true",
+                    help="fail unless continuous goodput strictly beats "
+                         "fixed at every (variant, rate) with both modes")
     args = ap.parse_args(argv)
     doc = json.loads(Path(args.path).read_text())
-    errs = check(doc, max_nm24_prefill_ratio=args.max_nm24_prefill_ratio)
+    errs = check(doc, max_nm24_prefill_ratio=args.max_nm24_prefill_ratio,
+                 require_continuous_wins=args.require_continuous_wins)
     if errs:
         for e in errs:
             print(f"FAIL: {e}", file=sys.stderr)
         return 1
     n = len(doc["rows"])
-    print(f"ok: {args.path} — {n} rows, schema + nm24 prefill ratio "
-          f"<= {args.max_nm24_prefill_ratio}x")
+    n_load = sum(1 for r in doc["rows"] if r.get("phase") == "load")
+    print(f"ok: {args.path} — {n} rows ({n_load} load), schema + nm24 "
+          f"prefill ratio <= {args.max_nm24_prefill_ratio}x"
+          + (", continuous wins" if args.require_continuous_wins else ""))
     return 0
 
 

@@ -1,0 +1,66 @@
+"""Serving under load: continuous batching vs fixed batches (BENCH_serve).
+
+Prunes a tiny llama31-8b to 2:4 with SparseSwaps, then replays a
+deterministic Poisson workload (``repro.serve.loadgen``) against every
+packed serving variant twice per arrival rate:
+
+* ``continuous`` — ``ContinuousScheduler``: requests join the decode
+  batch the step after they arrive and leave the moment they finish;
+  the paged KV cache keeps their sessions while slots turn over.
+* ``fixed``      — the baseline ``ServeEngine.generate`` path: queued
+  requests must share one prompt length per call and the whole batch
+  decodes the pow2 bucket of the group's longest output.
+
+Each (variant, mode, arrival_rate) cell becomes one ``phase == "load"``
+row merged into ``BENCH_serve.json`` (or ``--out``) next to the
+per-phase prefill/decode rows: offered vs goodput tok/s, p50/p99 TTFT,
+p50/p99 per-token latency, and the kernel the decode trace actually
+lowered. ``benchmarks/check_serve_bench.py --require-continuous-wins``
+is the acceptance gate on the committed doc.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+from pathlib import Path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31-8b")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots (continuous) / batch size (fixed)")
+    ap.add_argument("--rates", default="4,16",
+                    help="comma-separated arrival rates (requests/s)")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="simulated arrival window in seconds")
+    ap.add_argument("--prompt-len", default="8:24", metavar="MIN:MAX")
+    ap.add_argument("--output-len", default="4:16", metavar="MIN:MAX")
+    ap.add_argument("--t-max", type=int, default=20)
+    ap.add_argument("--n-calib", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the bench json here instead of the repo "
+                         "root (CI smoke)")
+    args = ap.parse_args(argv)
+
+    from repro.launch.prune import prune
+    from repro.launch.serve import serve
+
+    span = lambda s: tuple(int(x) for x in s.split(":", 1))
+    with tempfile.TemporaryDirectory() as td:
+        print(f"pruning {args.arch} (tiny) to 2:4, t_max={args.t_max} ...")
+        prune(args.arch, tiny=True, pattern="2:4", method="sparseswaps",
+              t_max=args.t_max, n_calib=args.n_calib, calib_seq=64,
+              out_dir=td, verbose=False)
+        serve(args.arch, tiny=True, batch=args.batch, masks_from=td,
+              fmt="masked", load_bench=True,
+              load_rates=tuple(float(r) for r in args.rates.split(",")),
+              load_duration=args.duration, load_seed=args.seed,
+              load_prompt_len=span(args.prompt_len),
+              load_output_len=span(args.output_len),
+              bench_out=Path(args.out) if args.out else None)
+
+
+if __name__ == "__main__":
+    main()

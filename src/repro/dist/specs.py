@@ -132,6 +132,29 @@ def cache_pspecs(cfg: ArchConfig, cache: Any, mesh, *,
     return jax.tree.map(leaf, cache)
 
 
+def page_pspecs(cfg: ArchConfig, pages: Any, mesh) -> Any:
+    """Paged-KV-pool specs: kv-head dim over "model", pages replicated.
+
+    Pool leaves are (L, n_pages, page, kv_heads, head_dim) — positionally
+    fixed, so the kv-head dim is identified by *position* (-2) rather
+    than by size (a tiny config can have page == kv_heads, which would
+    fool the first-match-by-size rule ``cache_pspecs`` uses). The page
+    dim never shards: pages are addressed by id from host-side tables,
+    and a session's pages must gather on every device.
+    """
+    ms = mesh.shape
+    kv_ok = ("model" in ms and cfg.n_kv_heads
+             and cfg.n_kv_heads % ms["model"] == 0)
+
+    def leaf(l) -> P:
+        shape = tuple(l.shape)
+        if kv_ok and len(shape) == 5 and shape[-2] == cfg.n_kv_heads:
+            return P(None, None, None, "model", None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(leaf, pages)
+
+
 def batch_pspecs(cfg: ArchConfig, batch: Any, mesh) -> Any:
     """Input-batch specs: leading dim over the DP axes, rest replicated."""
     ms = mesh.shape

@@ -45,6 +45,9 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
           masks_from: str | None = None, fmt: str | None = None,
           kernel: str = "auto", mesh: str | None = None, seed: int = 0,
           bench: bool = False, bench_out: Path | None = None,
+          sample=None, load_bench: bool = False, load_rates=(4.0, 16.0),
+          load_duration: float = 2.0, load_seed: int = 0,
+          load_prompt_len=(8, 24), load_output_len=(4, 16),
           verbose: bool = True) -> dict:
     """Serve a batch of prompts; returns tokens + timing (+ bench rows).
 
@@ -52,6 +55,12 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
     the faithful default — "masked" when a mask source is given, "dense"
     otherwise; an explicit "dense" is honored either way (the unpruned
     baseline). ``mesh``: None, "host", or "production".
+
+    ``sample`` is an optional ``serve.SamplingParams`` (greedy when
+    None). ``load_bench`` runs the continuous-vs-fixed load-generator
+    sweep (``serve.loadgen``) over ``load_rates`` arrivals/s and merges
+    the ``phase == "load"`` rows into the bench doc — the ``--bench``
+    per-phase rows are left untouched.
     """
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
@@ -80,7 +89,7 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
     engine = ServeEngine(api, params if fmt == "dense" else params_srv,
                          masks=mask_src, fmt=fmt, kernel=kernel,
                          mesh=mesh_obj)
-    res = engine.generate(prompt, gen)
+    res = engine.generate(prompt, gen, sampling=sample)
     out = {"tokens": res.tokens, "wall_s": res.prefill_s + res.decode_s,
            "tok_s": res.tok_s, "weight_bytes": engine.weight_bytes(),
            "format": fmt}
@@ -113,6 +122,38 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
                       f"{r['tok_s']:9.1f} tok/s  {extra}  "
                       f"[{r['kernel_used']}]  "
                       f"{r['weight_bytes']/2**20:8.2f} MiB")
+            print(f"wrote {path}")
+
+    if load_bench:
+        from repro.serve import loadgen
+        from repro.serve.sampling import GREEDY
+        formats = ["masked", "nm24", "gathered"] if mask_src is not None \
+            else ["dense"]
+        load_cfg = loadgen.LoadConfig(
+            duration_s=load_duration, seed=load_seed,
+            prompt_len=tuple(load_prompt_len),
+            output_len=tuple(load_output_len),
+            sampling=sample if sample is not None else GREEDY)
+        load_rows = loadgen.bench_load_rows(
+            api, params, mask_src,
+            formats=_servable(formats, api, params_srv, mask_src),
+            rates=tuple(load_rates), load=load_cfg, kernel=kernel,
+            mesh=mesh_obj, masked_params=params_srv, max_batch=batch)
+        path = bench_out or BENCH_OUT
+        doc = json.loads(path.read_text()) if path.exists() else {
+            "arch": arch, "batch": batch, "prompt_len": prompt_len,
+            "gen": gen, "devices": len(jax.devices()), "rows": []}
+        loadgen.merge_load_rows(doc, load_rows)
+        path.write_text(json.dumps(doc, indent=1))
+        out["load_bench"] = load_rows
+        if verbose:
+            for r in load_rows:
+                print(f"  {r['variant']:8s} {r['mode']:10s} "
+                      f"rate {r['arrival_rate']:5.1f}/s  goodput "
+                      f"{r['goodput_tok_s']:8.1f} tok/s  p50 TTFT "
+                      f"{r['p50_ttft_s']*1e3:7.1f} ms  p99 "
+                      f"{r['p99_ttft_s']*1e3:7.1f} ms  "
+                      f"[{r['kernel_used']}]")
             print(f"wrote {path}")
     return out
 
@@ -154,13 +195,37 @@ def main(argv=None):
     ap.add_argument("--bench-out", default=None,
                     help="where --bench writes its rows (default: the "
                          "repo-root BENCH_serve.json)")
+    ap.add_argument("--sample", default=None, metavar="TEMP[,TOP_P[,TOP_K]]",
+                    help="sample instead of greedy decode, e.g. "
+                         "'0.8,0.95,40' (temperature, nucleus mass, top-k)")
+    ap.add_argument("--load-bench", action="store_true",
+                    help="run the continuous-vs-fixed load-generator "
+                         "sweep and merge phase='load' rows into the "
+                         "bench doc")
+    ap.add_argument("--load-rates", default="4,16",
+                    help="comma-separated arrival rates (requests/s)")
+    ap.add_argument("--load-duration", type=float, default=2.0,
+                    help="simulated arrival window in seconds")
+    ap.add_argument("--load-seed", type=int, default=0)
+    ap.add_argument("--load-prompt-len", default="8:24", metavar="MIN:MAX",
+                    help="uniform prompt-length bounds for the workload")
+    ap.add_argument("--load-output-len", default="4:16", metavar="MIN:MAX",
+                    help="uniform output-length bounds for the workload")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    from repro.serve.sampling import parse_sample_flag
+    span = lambda s: tuple(int(x) for x in s.split(":", 1))
     serve(args.arch, tiny=args.tiny, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,
           masks_from=args.masks_from, fmt=args.format, kernel=args.kernel,
           mesh=args.mesh, seed=args.seed, bench=args.bench,
-          bench_out=Path(args.bench_out) if args.bench_out else None)
+          bench_out=Path(args.bench_out) if args.bench_out else None,
+          sample=parse_sample_flag(args.sample) if args.sample else None,
+          load_bench=args.load_bench,
+          load_rates=tuple(float(r) for r in args.load_rates.split(",")),
+          load_duration=args.load_duration, load_seed=args.load_seed,
+          load_prompt_len=span(args.load_prompt_len),
+          load_output_len=span(args.load_output_len))
 
 
 if __name__ == "__main__":

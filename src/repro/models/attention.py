@@ -11,8 +11,13 @@ Three execution paths, all numerically the softmax attention:
 
 Caches (single layer; the stacks add the leading L dim):
     KVCache.k/v : (B, S_max, kvH, dh)  — seq dim shardable ("cache_seq")
-    KVCache.pos : (S_max,) int32 absolute position per slot, -1 = empty.
+    KVCache.pos : (B, S_max) int32 absolute position per slot, -1 = empty.
                   Fixed caches write slot t; rolling caches write t % S_max.
+                  Per-ROW positions so a continuous-batching scheduler can
+                  decode ragged sessions in one batch: ``decode_attention``
+                  takes ``t`` as a scalar (every row at the same position —
+                  the fixed-batch path) or a (B,) vector (per-slot
+                  positions — the serving scheduler).
 
 RoPE is applied at *write* time with absolute positions, so cached keys
 never need re-rotation (standard for rolling windows).
@@ -36,7 +41,7 @@ _NEG = -1e30
 class KVCache(NamedTuple):
     k: jnp.ndarray          # (B, S_max, kvH, dh)
     v: jnp.ndarray          # (B, S_max, kvH, dh)
-    pos: jnp.ndarray        # (S_max,) int32, -1 empty
+    pos: jnp.ndarray        # (B, S_max) int32, -1 empty
     rolling: jnp.ndarray    # () bool_: rolling-window cache
 
 
@@ -45,7 +50,7 @@ def init_cache(batch: int, s_max: int, n_kv: int, dh: int, dtype,
     return KVCache(
         k=jnp.zeros((batch, s_max, n_kv, dh), dtype),
         v=jnp.zeros((batch, s_max, n_kv, dh), dtype),
-        pos=jnp.full((s_max,), -1, jnp.int32),
+        pos=jnp.full((batch, s_max), -1, jnp.int32),
         rolling=jnp.asarray(rolling),
     )
 
@@ -116,21 +121,29 @@ def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _scores_mask(q_pos, k_pos, *, causal: bool, window: int) -> jnp.ndarray:
-    """(Sq, Sk) bool validity mask from absolute positions (-1 key = empty)."""
-    valid = k_pos[None, :] >= 0
+    """(..., Sq, Sk) bool validity mask from absolute positions.
+
+    ``q_pos``: (..., Sq), ``k_pos``: (..., Sk); a -1 key slot = empty.
+    Leading dims broadcast, so shared positions give the classic
+    (Sq, Sk) mask and per-row positions (the continuous-batching decode
+    path) give (B, Sq, Sk).
+    """
+    q, k = q_pos[..., :, None], k_pos[..., None, :]
+    valid = k >= 0
     if causal:
-        valid &= k_pos[None, :] <= q_pos[:, None]
+        valid &= k <= q
     if window > 0:
-        valid &= k_pos[None, :] > q_pos[:, None] - window
+        valid &= k > q - window
     return valid
 
 
 def _sdpa(q, k, v, mask) -> jnp.ndarray:
-    """q: (B,Sq,H,dh) k,v: (B,Sk,H,dh) mask: (Sq,Sk) -> (B,Sq,H,dh)."""
+    """q: (B,Sq,H,dh) k,v: (B,Sk,H,dh) mask: (Sq,Sk)|(B,Sq,Sk) -> (B,Sq,H,dh)."""
     dh = q.shape[-1]
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     scores = scores * (dh ** -0.5)
-    scores = jnp.where(mask[None, None], scores, _NEG)
+    m = mask[None, None] if mask.ndim == 2 else mask[:, None]
+    scores = jnp.where(m, scores, _NEG)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
     return out
@@ -186,13 +199,17 @@ def self_attention(p, x, positions, cfg, *, masks=None, taps=None,
     if mode == "prefill" and cache is not None:
         s_max = cache.k.shape[1]
         S = k.shape[1]
+        B = k.shape[0]
         if S == s_max:
-            new_cache = KVCache(k, v, positions.astype(jnp.int32), cache.rolling)
+            new_cache = KVCache(
+                k, v,
+                jnp.broadcast_to(positions.astype(jnp.int32), (B, S)),
+                cache.rolling)
         else:  # write the prefix of a longer cache
             new_cache = KVCache(
                 jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)),
                 jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)),
-                cache.pos.at[:S].set(positions.astype(jnp.int32)),
+                cache.pos.at[:, :S].set(positions.astype(jnp.int32)),
                 cache.rolling,
             )
 
@@ -213,26 +230,41 @@ def self_attention(p, x, positions, cfg, *, masks=None, taps=None,
 def decode_attention(p, x, t, cfg, cache: KVCache, *, masks=None, taps=None):
     """One-token self attention against a cache.
 
-    x: (B, 1, d); t: () int32 absolute position of the new token.
+    x: (B, 1, d); t: () int32 absolute position of the new token, or a
+    (B,) vector of per-row positions (continuous batching: every slot of
+    the decode batch sits at its own sequence position).
     Returns (out (B,1,d), updated cache).
     """
+    B = x.shape[0]
     q = _proj_q(p, x, cfg, masks, taps)
     k, v = _proj_kv(p, x, cfg, masks, taps)
-    pos = jnp.full((1,), t, jnp.int32)
-    q = common.apply_rope(q, pos[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
-    k = common.apply_rope(k, pos[None, :], pct=cfg.rope_pct, theta=cfg.rope_theta)
+    per_row = jnp.ndim(t) == 1
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    pos = t_vec[:, None]                                    # (B, 1)
+    q = common.apply_rope(q, pos, pct=cfg.rope_pct, theta=cfg.rope_theta)
+    k = common.apply_rope(k, pos, pct=cfg.rope_pct, theta=cfg.rope_theta)
 
     s_max = cache.k.shape[1]
-    slot = jnp.where(cache.rolling, t % s_max, jnp.minimum(t, s_max - 1))
-    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
-    cpos = cache.pos.at[slot].set(t)
+    if per_row:
+        slot = jnp.where(cache.rolling, t_vec % s_max,
+                         jnp.minimum(t_vec, s_max - 1))     # (B,)
+        bidx = jnp.arange(B)
+        ck = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+        cpos = cache.pos.at[bidx, slot].set(t_vec)
+    else:
+        slot = jnp.where(cache.rolling, t % s_max, jnp.minimum(t, s_max - 1))
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        cpos = cache.pos.at[:, slot].set(t)
     new_cache = KVCache(ck, cv, cpos, cache.rolling)
 
     kf = _repeat_kv(ck, cfg.n_heads)
     vf = _repeat_kv(cv, cfg.n_heads)
     window = cfg.sliding_window
-    mask = _scores_mask(pos, cpos, causal=True, window=window)  # (1, S_max)
+    mask = _scores_mask(pos, cpos, causal=True, window=window)  # (B, 1, S_max)
     out = _sdpa(q, kf, vf, mask)
     out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
     out = dense(out, p["wo"], mask=_m(masks, "wo"), tap="wo", taps=taps)

@@ -377,6 +377,31 @@ def scan(body, init, xs, *, cfg=None, length=None):
 
 
 # ---------------------------------------------------------------------------
+# cache page views (serving)
+# ---------------------------------------------------------------------------
+
+def rows_to_pages(x: jnp.ndarray, page: int, axis: int) -> jnp.ndarray:
+    """View a cache's sequence axis as (n_pages, page) — zero-copy reshape.
+
+    The bridge between the models' dense decode caches (contiguous
+    sequence rows) and ``serve.kvcache``'s paged pool: a slot row
+    (L, C, kvH, dh) with ``axis=1`` becomes (L, C/page, page, kvH, dh),
+    ready to scatter page-by-page. ``C`` must divide by ``page``.
+    """
+    s = x.shape[axis]
+    if s % page:
+        raise ValueError(f"sequence dim {s} not divisible by page {page}")
+    return x.reshape(*x.shape[:axis], s // page, page, *x.shape[axis + 1:])
+
+
+def pages_to_rows(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Inverse of ``rows_to_pages``: merge (n_pages, page) back into one
+    contiguous sequence axis at ``axis``."""
+    n, p = x.shape[axis], x.shape[axis + 1]
+    return x.reshape(*x.shape[:axis], n * p, *x.shape[axis + 2:])
+
+
+# ---------------------------------------------------------------------------
 # misc
 # ---------------------------------------------------------------------------
 

@@ -314,9 +314,21 @@ def init_decode_cache(params, cfg, batch: int, s_max: int, *, rolling=False):
 
 
 def prefill(params, batch, cfg, cache: DecodeCache, *, masks=None):
-    """Run the prompt, filling caches. Returns (last-token logits, cache)."""
+    """Run the prompt, filling caches. Returns (last-token logits, cache).
+
+    ``batch["n_valid"]`` (optional () int32) marks a right-padded prompt:
+    only the first ``n_valid`` tokens are real. The pad tail is masked
+    out of the cache (pos = -1, so no later query attends to it), the
+    returned logits are taken at position ``n_valid - 1``, and decoding
+    resumes at ``t = n_valid``. Right padding keeps RoPE positions and
+    the causal mask exact for the real prefix — real queries never see a
+    pad key — so a prompt padded to its pow2 bucket prefills through ONE
+    compiled shape per bucket instead of one per length (the serving
+    scheduler's admission path).
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
+    n_valid = batch.get("n_valid")
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, "batch", "seq", None)
     positions = jnp.arange(S)
@@ -338,16 +350,27 @@ def prefill(params, batch, cfg, cache: DecodeCache, *, masks=None):
         x, new_kv, _, _ = _scan_layers(params, x, positions, cfg, masks=masks,
                                        want_taps=False, mode="prefill",
                                        cache=cache.kv)
-        new_cache = DecodeCache(kv=new_kv, cross_kv=ck,
-                                t=jnp.asarray(S, jnp.int32))
+        new_kv, t_next, x_last = _finish_prefill(new_kv, x, S, n_valid)
+        new_cache = DecodeCache(kv=new_kv, cross_kv=ck, t=t_next)
     else:
         x, new_kv, _, _ = _scan_layers(params, x, positions, cfg, masks=masks,
                                        want_taps=False, mode="prefill",
                                        cache=cache.kv)
-        new_cache = DecodeCache(kv=new_kv, cross_kv=None,
-                                t=jnp.asarray(S, jnp.int32))
-    x = _apply_norm(params["ln_f"], x[:, -1:], cfg)
+        new_kv, t_next, x_last = _finish_prefill(new_kv, x, S, n_valid)
+        new_cache = DecodeCache(kv=new_kv, cross_kv=None, t=t_next)
+    x = _apply_norm(params["ln_f"], x_last, cfg)
     return lm_head(params, x, cfg), new_cache
+
+
+def _finish_prefill(new_kv, x, S: int, n_valid):
+    """-> (kv with pad keys masked, next position, last REAL hidden state)."""
+    if n_valid is None:
+        return new_kv, jnp.asarray(S, jnp.int32), x[:, -1:]
+    nv = jnp.asarray(n_valid, jnp.int32)
+    # pad slots were written with pos >= n_valid; -1 hides them from every
+    # future query (the decode steps then overwrite them in order)
+    new_kv = new_kv._replace(pos=jnp.where(new_kv.pos < nv, new_kv.pos, -1))
+    return new_kv, nv, jax.lax.dynamic_slice_in_dim(x, nv - 1, 1, axis=1)
 
 
 def decode_step(params, token, cfg, cache: DecodeCache, *, masks=None):

@@ -1,4 +1,10 @@
-"""Sparse serving runtime: packed-weight batched prefill/decode."""
-from .engine import FORMATS, ServeEngine, ServeResult, bench_rows
+"""Sparse serving runtime: engine (compiled step fns), scheduler
+(continuous batching), kvcache (paged session storage), sampling."""
+from .engine import FORMATS, ServeEngine, ServeResult, bench_rows, next_pow2
+from .kvcache import PagedKVCache
+from .sampling import GREEDY, SamplingParams
+from .scheduler import Completion, ContinuousScheduler, StepEvents
 
-__all__ = ["FORMATS", "ServeEngine", "ServeResult", "bench_rows"]
+__all__ = ["FORMATS", "ServeEngine", "ServeResult", "bench_rows",
+           "next_pow2", "PagedKVCache", "SamplingParams", "GREEDY",
+           "ContinuousScheduler", "Completion", "StepEvents"]

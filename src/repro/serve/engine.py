@@ -41,8 +41,14 @@ from repro.core import packed as packed_lib
 from repro.dist import specs as specs_lib
 from repro.kernels import spmm
 from repro.models import ModelApi, common
+from repro.serve import sampling as sampling_lib
 
 FORMATS = ("dense", "masked", "nm24", "gathered")
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (shape bucketing for jit stability)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass
@@ -116,7 +122,8 @@ class ServeEngine:
         self.pack_s = time.time() - t0
         self._policy = common.PackedMatmulPolicy(kernel)
         self._steps = None              # (prefill, decode) jits, built once
-        self._scans: dict = {}          # (n_steps, want_logits) -> jit
+        self._scans: dict = {}          # (n_steps, want_logits, sampled) -> jit
+        self._fns: dict = {}            # scheduler-facing compiled fns
         # per-phase kernel actually lowered at trace time ("dense" for the
         # unpacked formats, else e.g. "jnp" / "pallas" / "jnp(vmem)")
         self.kernel_used: dict = {}
@@ -174,27 +181,38 @@ class ServeEngine:
                                                      masks=self.masks)
         return self._steps
 
-    def _decode_scan(self, n_steps: int, want_logits: bool):
-        """One jitted ``lax.scan`` over the whole greedy decode loop.
+    def _decode_scan(self, n_steps: int, want_logits: bool,
+                     sampled: bool = False):
+        """One jitted ``lax.scan`` over the whole decode loop.
 
         A Python decode loop pays one dispatch (pytree flatten + device
         round-trip) per token; at serving batch sizes that fixed cost
         swamps the per-step matmul work and buries the packed-kernel
         advantage in noise. Scanning the step in-graph makes decode a
         single dispatch for all ``n_steps`` tokens — what the timed
-        phase should measure. Compiled once per (n_steps, want_logits)
-        and cached on the engine like the prefill/decode jits.
+        phase should measure. Compiled once per (n_steps, want_logits,
+        sampled) and cached on the engine like the prefill/decode jits;
+        the greedy graph stays pure argmax (no sort in the timed phase),
+        the sampled graph takes the per-row knobs as traced (B,) arrays
+        so changing temperature/seed never recompiles.
         """
-        key = (n_steps, want_logits)
+        key = (n_steps, want_logits, sampled)
         if key not in self._scans:
             _, decode = self._serve_steps()
 
-            def run(params, tok0, cache):
+            def run(params, tok0, cache, samp):
                 def step(carry, _):
                     tok, cache = carry
                     logits, cache = decode(params, tok[:, None], cache)
-                    nxt = jnp.argmax(logits[:, -1],
-                                     axis=-1).astype(jnp.int32)
+                    if sampled:
+                        # post-step cache.t IS the absolute position of
+                        # the token being sampled (the PRNG key index)
+                        nxt = sampling_lib.sample_tokens(
+                            logits[:, -1], samp["temp"], samp["top_p"],
+                            samp["top_k"], samp["seed"], cache.t)
+                    else:
+                        nxt = jnp.argmax(logits[:, -1],
+                                         axis=-1).astype(jnp.int32)
                     out = (nxt, logits[:, -1].astype(jnp.float32)) \
                         if want_logits else nxt
                     return (nxt, cache), out
@@ -207,8 +225,8 @@ class ServeEngine:
         return self._scans[key]
 
     def _greedy_loop(self, prompt: dict, n_new: int, *,
-                     want_logits: bool = False):
-        """The one prefill → argmax → decode loop both surfaces consume.
+                     want_logits: bool = False, sampling=None):
+        """The one prefill → sample → decode loop both surfaces consume.
 
         The active ``MatmulPolicy`` is installed around the traced calls,
         so packed leaves lower through the spmm kernels inside the same
@@ -216,14 +234,30 @@ class ServeEngine:
         (tokens (B, n_new), last-step logits (n_new, B, V) fp32 or None,
         prefill_s, decode_s). The logits trace is only accumulated when
         asked — the casts/stack must not sit inside timed decode.
+
+        The cache is sized to the pow2 bucket of ``S + n_new`` (extra
+        slots carry pos = -1 and are masked out of every score), so the
+        decode scan compiles once per (bucket, n_new) instead of once
+        per exact (prompt_len, n_new) pair.
+
+        ``sampling`` is None for greedy, else a ``SamplingParams`` (or
+        one per batch row); the token at absolute position p draws from
+        ``fold_in(key(seed), p)`` — the same key the continuous
+        scheduler uses, so a request replays identically on both paths.
         """
         B, S = prompt["tokens"].shape
+        samp = None
+        if sampling is not None:
+            per_row = sampling if isinstance(sampling, (list, tuple)) \
+                else [sampling] * B
+            samp = sampling_lib.params_arrays(list(per_row))
         with self._ctx(), common.use_matmul_policy(self._policy):
             if self.mesh is not None:
                 prompt = jax.device_put(prompt, specs_lib.named(
                     self.mesh, specs_lib.batch_pspecs(self.cfg, prompt,
                                                       self.mesh)))
-            cache = self.api.init_cache(self.params, B, S + n_new)
+            cache = self.api.init_cache(self.params, B,
+                                        next_pow2(S + n_new))
             prefill, _ = self._serve_steps()
             t0 = time.time()
             # dispatch decisions are trace-time constants, so the records
@@ -231,7 +265,12 @@ class ServeEngine:
             # warm calls leave the log empty and keep the noted value.
             with spmm.record_dispatch() as rec_p:
                 logits0, cache = prefill(self.params, prompt, cache)
-            tok0 = jnp.argmax(logits0[:, -1], axis=-1).astype(jnp.int32)
+            if samp is None:
+                tok0 = jnp.argmax(logits0[:, -1], axis=-1).astype(jnp.int32)
+            else:
+                tok0 = sampling_lib.sample_tokens(
+                    logits0[:, -1], samp["temp"], samp["top_p"],
+                    samp["top_k"], samp["seed"], jnp.int32(S))
             jax.block_until_ready(tok0)
             t1 = time.time()
             rec_d: list = []
@@ -240,9 +279,10 @@ class ServeEngine:
                 # the whole decode loop is ONE scanned dispatch — the
                 # timed phase measures graph cost, not n_new-1 python
                 # round-trips (see _decode_scan)
-                run = self._decode_scan(n_new - 1, want_logits)
+                run = self._decode_scan(n_new - 1, want_logits,
+                                        samp is not None)
                 with spmm.record_dispatch() as rec_d:
-                    ys = run(self.params, tok0, cache)
+                    ys = run(self.params, tok0, cache, samp)
                 toks, logit_steps = ys if want_logits else (ys, None)
                 out = jnp.concatenate([tok0[:, None], toks.T], axis=1)
             else:
@@ -264,9 +304,16 @@ class ServeEngine:
             # no spmm dispatches traced: dense/masked serve plain matmuls
             self.kernel_used[phase] = "dense"
 
-    def generate(self, prompt: dict, n_new: int) -> ServeResult:
-        """Batched prefill + ``n_new`` greedy decode steps, timed."""
-        tokens, _, prefill_s, decode_s = self._greedy_loop(prompt, n_new)
+    def generate(self, prompt: dict, n_new: int, *,
+                 sampling=None) -> ServeResult:
+        """Batched prefill + ``n_new`` decode steps, timed.
+
+        ``sampling=None`` decodes greedily (the historical behaviour);
+        a ``SamplingParams`` — or a list of one per batch row — samples
+        with per-request seeds (see ``serve.sampling``).
+        """
+        tokens, _, prefill_s, decode_s = self._greedy_loop(
+            prompt, n_new, sampling=sampling)
         return ServeResult(tokens=tokens, prefill_s=prefill_s,
                            decode_s=decode_s, n_new=n_new,
                            batch=tokens.shape[0])
@@ -275,14 +322,135 @@ class ServeEngine:
         """(n_new, B, vocab) greedy logits — the parity-test surface."""
         return self._greedy_loop(prompt, n_new, want_logits=True)[1]
 
+    # -- continuous-batching step fns (consumed by serve.scheduler) ---------
 
-def _kernel_summary(rec: list) -> str:
+    @property
+    def supports_continuous(self) -> bool:
+        """Continuous batching needs the plain decoder-only KV layout:
+        per-token pages and a per-row decode clock. Recurrent families
+        (rwkv, zamba) carry state, not per-token KV; cross-attn caches
+        (VLM) and encoder-decoder models add a second, unpaged cache."""
+        from repro.models import transformer
+        return (self.api.module is transformer
+                and not getattr(self.cfg, "cross_attn_every", 0))
+
+    def _require_continuous(self):
+        if not self.supports_continuous:
+            raise NotImplementedError(
+                f"continuous batching supports plain decoder-only "
+                f"transformers; {self.cfg.name!r} is not one")
+
+    def prefill_session(self, tokens: jnp.ndarray, n_valid: int, samp: dict):
+        """Prefill ONE session from a right-padded prompt row.
+
+        ``tokens`` is (1, S_bucket) int32 with the real prompt in the
+        first ``n_valid`` positions; ``samp`` holds (1,) sampling arrays
+        (``sampling.params_arrays``). Returns ``(tok0 (1,) int32,
+        k (L, S_bucket, kvH, dh), v)`` — the first generated token
+        (sampled at PRNG position ``n_valid``) and the dense cache row to
+        scatter into pages. Compiled once per S_bucket: ``n_valid`` is a
+        traced scalar, so every prompt length in a bucket shares the jit.
+        """
+        self._require_continuous()
+        s_bucket = tokens.shape[1]
+        key = ("prefill_session", s_bucket)
+        if key not in self._fns:
+            def fn(params, tokens, n_valid, samp):
+                cache = self.api.init_cache(params, 1, s_bucket)
+                logits, cache = self.api.prefill(
+                    params, {"tokens": tokens, "n_valid": n_valid}, cache,
+                    masks=self.masks)
+                tok0 = sampling_lib.sample_tokens(
+                    logits[:, -1], samp["temp"], samp["top_p"],
+                    samp["top_k"], samp["seed"], n_valid)
+                kv = cache.kv
+                return tok0, kv.k[:, 0], kv.v[:, 0]
+
+            self._fns[key] = jax.jit(fn)
+        with self._ctx(), common.use_matmul_policy(self._policy):
+            with spmm.record_dispatch() as rec:
+                out = self._fns[key](self.params, tokens,
+                                     jnp.int32(n_valid), samp)
+            jax.block_until_ready(out[0])
+        self._note_kernels("prefill", rec)
+        return out
+
+    def decode_chunk(self, tok: jnp.ndarray, cache, active: jnp.ndarray,
+                     samp: dict, *, n_steps: int, bucket: int):
+        """Run ``n_steps`` decode steps on rows ``[:bucket]`` of a
+        full-width working cache; rows beyond the bucket pass through
+        untouched.
+
+        ``tok`` (B,) holds each slot's last token, ``active`` (B,) bool
+        masks live slots — inactive rows hold their token and FREEZE
+        their clock ``t`` (their in-step KV write lands in the slack
+        region past their session length, where the contiguity contract
+        already says garbage lives, so nothing real is harmed). Returns
+        ``(toks (n_steps, bucket), cache')``. Compiled once per
+        (n_steps, bucket) — the slice/write-back lives in-graph so the
+        whole chunk stays one dispatch, and the cache buffers are
+        donated.
+        """
+        self._require_continuous()
+        from repro.models import attention as attn
+        from repro.models.transformer import DecodeCache
+        key = ("chunk", n_steps, bucket)
+        if key not in self._fns:
+            def fn(params, tok, cache, active, samp):
+                kv = cache.kv
+                sub = DecodeCache(
+                    kv=attn.KVCache(kv.k[:, :bucket], kv.v[:, :bucket],
+                                    kv.pos[:, :bucket], kv.rolling),
+                    cross_kv=None, t=cache.t[:bucket])
+                act = active[:bucket]
+
+                def step(carry, _):
+                    tk, c = carry
+                    logits, c2 = self.api.decode_step(
+                        params, tk[:, None], c, masks=self.masks)
+                    nxt = sampling_lib.sample_tokens(
+                        logits[:, -1], samp["temp"][:bucket],
+                        samp["top_p"][:bucket], samp["top_k"][:bucket],
+                        samp["seed"][:bucket], c2.t)
+                    nxt = jnp.where(act, nxt, tk)
+                    c2 = c2._replace(t=jnp.where(act, c2.t, c.t))
+                    return (nxt, c2), nxt
+
+                (_, sub), toks = jax.lax.scan(
+                    step, (tok[:bucket], sub), None, length=n_steps)
+                kv2 = sub.kv
+                kv_out = attn.KVCache(
+                    kv.k.at[:, :bucket].set(kv2.k),
+                    kv.v.at[:, :bucket].set(kv2.v),
+                    kv.pos.at[:, :bucket].set(kv2.pos), kv.rolling)
+                return toks, DecodeCache(
+                    kv=kv_out, cross_kv=None,
+                    t=cache.t.at[:bucket].set(sub.t))
+
+            self._fns[key] = jax.jit(fn, donate_argnums=2)
+        with self._ctx(), common.use_matmul_policy(self._policy):
+            with spmm.record_dispatch() as rec:
+                toks, cache = self._fns[key](self.params, tok, cache,
+                                             active, samp)
+            jax.block_until_ready(toks)
+        self._note_kernels("decode", rec)
+        return toks, cache
+
+    def compiled_fn_keys(self) -> list:
+        """Keys of the scheduler-facing compiled fns (jit-churn tests)."""
+        return sorted(self._fns, key=repr)
+
+
+def kernel_summary(rec: list) -> str:
     """Collapse trace-time dispatch records into one bench-row tag."""
     names = sorted({r["kernel"] for r in rec})
     tag = "+".join(names)
     if any(r["reason"] == "vmem" for r in rec):
         tag += "(vmem-fallback)"
     return tag
+
+
+_kernel_summary = kernel_summary
 
 
 def bench_rows(api: ModelApi, params: dict, masks, prompt: dict,

@@ -1,0 +1,231 @@
+"""Load generation: Poisson arrivals, virtual clock, serving metrics.
+
+Shared core of ``benchmarks/serve_load.py`` and the launcher's
+``--load-bench`` flag (the launcher must not import ``benchmarks/``).
+
+**Workload.** ``make_workload`` draws a deterministic request trace from
+``LoadConfig``: inter-arrival times are Exp(arrival_rate) (a Poisson
+process over the ``duration_s`` window), prompt and output lengths are
+uniform over inclusive bounds, token ids come from the same rng. The
+trace is a plain list — both drivers replay the identical requests.
+
+**Virtual clock.** Arrivals live on a simulated clock that advances by
+the *measured wall time* of each scheduler step (or fixed-batch call):
+a request "arrives" when the simulated clock passes its arrival time,
+and every token is stamped with the simulated time its dispatch
+completed. This folds real compute cost into queueing behaviour without
+needing a real-time client harness; timestamps are chunk-granular
+(a token's latency includes the dispatch it rode in on).
+
+**Drivers.**
+
+* ``run_continuous`` — the ``ContinuousScheduler``: requests join the
+  decode batch as they arrive, leave when done.
+* ``run_fixed`` — the baseline ``ServeEngine.generate`` path: requests
+  queue until a batch of EQUAL prompt lengths is available (the fixed
+  path's shape constraint), and the whole batch decodes the pow2 bucket
+  of the group's longest output — stragglers wait, surplus tokens are
+  waste. This is the honest cost of fixed-shape serving under ragged
+  traffic, which is exactly what continuous batching removes.
+
+**Metrics** (one dict per run): ``offered_tok_s`` counts every
+*requested* generation token over the makespan, ``goodput_tok_s`` every
+*delivered* token of completed requests — goodput ≤ offered by
+construction. TTFT and per-token latency report p50/p99 over requests
+(per-token latency for a request is its decode span divided by its
+decoded tokens). Both drivers run the workload TWICE (compile pass,
+then a timed pass on warm jits) so compilation never pollutes the rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .engine import ServeEngine, next_pow2
+from .sampling import GREEDY, SamplingParams
+from .scheduler import ContinuousScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadConfig:
+    """A deterministic synthetic traffic trace."""
+
+    arrival_rate: float = 8.0          # requests / simulated second
+    duration_s: float = 2.0            # arrival window (simulated)
+    seed: int = 0
+    prompt_len: tuple = (8, 24)        # inclusive uniform bounds
+    output_len: tuple = (4, 16)
+    sampling: SamplingParams = GREEDY
+    vocab_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadRequest:
+    arrival: float
+    prompt: np.ndarray
+    max_new: int
+    sampling: SamplingParams
+
+
+def make_workload(cfg: LoadConfig) -> list:
+    """Poisson arrivals with uniform prompt/output lengths, seeded."""
+    rng = np.random.default_rng(cfg.seed)
+    out, now = [], 0.0
+    while True:
+        now += float(rng.exponential(1.0 / cfg.arrival_rate))
+        if now >= cfg.duration_s:
+            return out
+        s = int(rng.integers(cfg.prompt_len[0], cfg.prompt_len[1] + 1))
+        n = int(rng.integers(cfg.output_len[0], cfg.output_len[1] + 1))
+        prompt = rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        out.append(LoadRequest(arrival=now, prompt=prompt, max_new=n,
+                               sampling=cfg.sampling))
+
+
+def _metrics(workload, first_t, done_t, done_new, arrivals, makespan):
+    """Fold raw timestamps into the bench-row metric dict."""
+    offered = sum(r.max_new for r in workload)
+    delivered = sum(done_new.values())
+    ttft = [first_t[i] - arrivals[i] for i in first_t]
+    per_tok = [(done_t[i] - first_t[i]) / max(done_new[i] - 1, 1)
+               for i in done_t]
+    pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+    makespan = max(makespan, 1e-9)
+    return {
+        "n_requests": len(workload),
+        "completed": len(done_t),
+        "makespan_s": makespan,
+        "offered_tok_s": offered / makespan,
+        "goodput_tok_s": delivered / makespan,
+        "tok_s": delivered / makespan,
+        "p50_ttft_s": pct(ttft, 50), "p99_ttft_s": pct(ttft, 99),
+        "p50_tok_latency_s": pct(per_tok, 50),
+        "p99_tok_latency_s": pct(per_tok, 99),
+    }
+
+
+def run_continuous(engine: ServeEngine, workload: list, *,
+                   warmup: bool = True, **sched_kw) -> dict:
+    """Drive a ``ContinuousScheduler`` through the workload."""
+
+    def one_pass() -> dict:
+        sch = ContinuousScheduler(engine, **sched_kw)
+        arrivals, first_t, done_t, done_new = {}, {}, {}, {}
+        now, i = 0.0, 0
+        while i < len(workload) or not sch.idle:
+            while i < len(workload) and workload[i].arrival <= now:
+                r = workload[i]
+                rid = sch.submit(r.prompt, r.max_new, sampling=r.sampling)
+                arrivals[rid] = r.arrival
+                i += 1
+            if sch.idle and i < len(workload):
+                now = workload[i].arrival        # jump an idle gap
+                continue
+            t0 = time.perf_counter()
+            ev = sch.step()
+            now += time.perf_counter() - t0
+            for rid in ev.tokens:
+                first_t.setdefault(rid, now)
+            for c in ev.completed:
+                done_t[c.rid], done_new[c.rid] = now, c.n_new
+        return _metrics(workload, first_t, done_t, done_new, arrivals, now)
+
+    if warmup:
+        one_pass()                               # compile pass
+    return one_pass()
+
+
+def run_fixed(engine: ServeEngine, workload: list, *, batch: int = 8,
+              warmup: bool = True) -> dict:
+    """Drive the fixed-batch ``ServeEngine.generate`` path.
+
+    The fixed path needs one prompt length per call, so queued requests
+    group by exact prompt length (arrival order within a group, oldest
+    group first) and each group decodes ``next_pow2(max(max_new))``
+    tokens — padding rows and surplus tokens are counted against it, as
+    they cost real compute.
+    """
+    import jax.numpy as jnp
+
+    def one_pass() -> dict:
+        pending = list(range(len(workload)))     # arrival-sorted indices
+        arrivals = {i: workload[i].arrival for i in pending}
+        first_t, done_t, done_new = {}, {}, {}
+        now, n_in = 0.0, 0
+        backlog: list = []
+        while backlog or n_in < len(workload):
+            while n_in < len(workload) and workload[n_in].arrival <= now:
+                backlog.append(n_in)
+                n_in += 1
+            if not backlog:
+                now = workload[n_in].arrival
+                continue
+            lead = workload[backlog[0]]
+            group = [i for i in backlog
+                     if len(workload[i].prompt) == len(lead.prompt)][:batch]
+            backlog = [i for i in backlog if i not in group]
+            toks = np.stack([workload[i].prompt for i in group])
+            n_new = next_pow2(max(workload[i].max_new for i in group))
+            samp = [workload[i].sampling for i in group]
+            sampled = any(s.temperature > 0 for s in samp)
+            t0 = time.perf_counter()
+            res = engine.generate({"tokens": jnp.asarray(toks)}, n_new,
+                                  sampling=samp if sampled else None)
+            dt = time.perf_counter() - t0
+            for i in group:                      # first token ≈ prefill end
+                first_t[i] = now + res.prefill_s
+            now += dt
+            for i in group:
+                done_t[i] = now
+                done_new[i] = workload[i].max_new
+        return _metrics(workload, first_t, done_t, done_new, arrivals, now)
+
+    if warmup:
+        one_pass()
+    return one_pass()
+
+
+def bench_load_rows(api, params, mask_src, *, formats=("masked",),
+                    rates=(8.0,), load: LoadConfig | None = None,
+                    kernel: str = "auto", mesh=None,
+                    masked_params=None, modes=("continuous", "fixed"),
+                    **sched_kw) -> list:
+    """The arrival-rate sweep: one ``phase == "load"`` row per
+    (variant, mode, rate), ready for BENCH_serve.json."""
+    load = load or LoadConfig()
+    max_batch = sched_kw.get("max_batch", 8)
+    rows = []
+    for fmt in formats:
+        p = params if fmt == "dense" or masked_params is None \
+            else masked_params
+        eng = ServeEngine(api, p, masks=mask_src if fmt != "dense" else None,
+                          fmt=fmt, kernel=kernel, mesh=mesh)
+        for rate in rates:
+            wl = make_workload(dataclasses.replace(
+                load, arrival_rate=rate, vocab_size=api.cfg.vocab_size))
+            for mode in modes:
+                if mode == "continuous":
+                    m = run_continuous(eng, wl, **sched_kw)
+                else:
+                    m = run_fixed(eng, wl, batch=max_batch)
+                rows.append({
+                    "variant": fmt, "phase": "load", "mode": mode,
+                    "kernel": kernel if fmt in ("nm24", "gathered")
+                    else "dense",
+                    "kernel_used": eng.kernel_used.get("decode", "dense"),
+                    "arrival_rate": rate, "duration_s": load.duration_s,
+                    "seed": load.seed, "weight_bytes": eng.weight_bytes(),
+                    "pack_s": eng.pack_s,
+                    **m,
+                })
+    return rows
+
+
+def merge_load_rows(doc: dict, rows: list) -> dict:
+    """Replace a bench doc's ``phase == "load"`` rows with ``rows``,
+    keeping the per-phase prefill/decode rows untouched."""
+    kept = [r for r in doc.get("rows", []) if r.get("phase") != "load"]
+    doc["rows"] = kept + list(rows)
+    return doc

@@ -1,0 +1,113 @@
+"""In-graph token sampling: temperature / top-k / top-p, per-request seeds.
+
+The sampling layer of the serving stack. Every knob is a *traced array*
+(one value per batch slot), so a continuous-batching decode step serves
+mixed sampling configs — one request greedy, its neighbor at T=0.9
+top-p — from ONE compiled program: changing a request's temperature
+never recompiles anything.
+
+Determinism contract (the scheduler correctness tests lean on it):
+
+* the PRNG key for the token at absolute position ``t`` is
+  ``fold_in(key(seed), t)`` — a pure function of (request seed, position).
+  A request therefore samples the SAME token stream whether it runs
+  alone, batched with strangers, or leaves the decode batch and rejoins
+  later: the key never depends on scheduler state, step count, or slot.
+* greedy is the ``temperature == 0`` special case of the same code path
+  (``jnp.where`` on the traced temperature), not a separate program.
+* ties break deterministically: ``argsort`` is stable and
+  ``jax.random.categorical`` is a pure function of (key, logits).
+
+``top_k == 0`` disables the top-k filter; ``top_p >= 1`` disables the
+nucleus filter. Both filters compose (top-k first, then top-p over the
+renormalized survivors — the usual order).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.float32(-1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling config. Defaults are pure greedy."""
+
+    temperature: float = 0.0
+    top_p: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+    def validate(self) -> "SamplingParams":
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not 0 < self.top_p <= 1:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        return self
+
+
+GREEDY = SamplingParams()
+
+
+def params_arrays(params: list[SamplingParams]) -> dict:
+    """Stack per-request params into the (B,) arrays the graph consumes."""
+    return {
+        "temp": jnp.asarray([p.temperature for p in params], jnp.float32),
+        "top_p": jnp.asarray([p.top_p for p in params], jnp.float32),
+        "top_k": jnp.asarray([p.top_k for p in params], jnp.int32),
+        "seed": jnp.asarray([p.seed for p in params], jnp.uint32),
+    }
+
+
+def _sample_row(logits, temp, top_p, top_k, seed, t):
+    """One row: logits (V,) f32, scalars -> sampled token () int32."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    order = jnp.argsort(-logits)                    # stable: ties by index
+    ls = jnp.take(logits, order) / jnp.maximum(temp, 1e-6)
+    ranks = jnp.arange(V)
+    keep = jnp.where(top_k > 0, ranks < top_k, True)
+    probs = jax.nn.softmax(jnp.where(keep, ls, _NEG))
+    # nucleus: keep tokens whose preceding cumulative mass is < top_p
+    # (the first token always survives; the one crossing top_p is kept)
+    cum = jnp.cumsum(probs)
+    keep &= jnp.where(top_p < 1.0, (cum - probs) < top_p, True)
+    key = jax.random.fold_in(jax.random.key(seed), t)
+    idx = jax.random.categorical(key, jnp.where(keep, ls, _NEG))
+    sampled = jnp.take(order, idx).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)
+
+
+def sample_tokens(logits, temp, top_p, top_k, seed, t) -> jnp.ndarray:
+    """Batched sampling: logits (B, V) f32, per-slot knobs (B,) -> (B,) int32.
+
+    ``t`` is the absolute sequence position of the token being sampled
+    (per slot) — the sole PRNG input besides the request seed, making the
+    stream independent of batch composition (see module docstring).
+    """
+    return jax.vmap(_sample_row)(
+        logits.astype(jnp.float32),
+        jnp.broadcast_to(temp, logits.shape[:1]).astype(jnp.float32),
+        jnp.broadcast_to(top_p, logits.shape[:1]).astype(jnp.float32),
+        jnp.broadcast_to(top_k, logits.shape[:1]).astype(jnp.int32),
+        jnp.broadcast_to(seed, logits.shape[:1]).astype(jnp.uint32),
+        jnp.broadcast_to(t, logits.shape[:1]).astype(jnp.int32),
+    )
+
+
+def parse_sample_flag(spec: str) -> SamplingParams:
+    """'temp[,top_p[,top_k]]' -> SamplingParams (the --sample CLI flag)."""
+    parts = [s.strip() for s in spec.split(",") if s.strip()]
+    if not parts:
+        raise ValueError(f"empty --sample spec {spec!r}")
+    temp = float(parts[0])
+    top_p = float(parts[1]) if len(parts) > 1 else 1.0
+    top_k = int(parts[2]) if len(parts) > 2 else 0
+    return SamplingParams(temperature=temp, top_p=top_p,
+                          top_k=top_k).validate()

@@ -1,0 +1,373 @@
+"""Continuous batching: per-step join/leave of the decode batch.
+
+The request-lifecycle layer of the serving stack, sitting between
+``serve.engine`` (compiled step fns over packed weights) and
+``serve.kvcache`` (paged session storage):
+
+            submit() ──> queue ──(admission: free slot + pages)──┐
+                                                                 v
+       prefill_session (B=1, prompt bucketed pow2, n_valid traced)
+                │ store prompt KV into pages
+                v
+       join: gather pages ─> working-cache row b, t[b]=len, tok[b]
+                │
+                v                        ┌── leave (done): free pages
+       decode_chunk (n_steps per dispatch) ──┤   or sync row ─> pages
+                │                        └── swap-remove compaction
+                └── repeat
+
+**Shape discipline** — nothing recompiles in steady state:
+
+* prompts right-pad to a pow2 bucket; ``n_valid`` is traced, so one
+  prefill jit per bucket (≤ log2(capacity) programs);
+* the decode working cache is a FIXED (max_batch, capacity) dense
+  cache; chunks run on its leading pow2 bucket of rows
+  (``bucket_batch=False`` pins the full width — the bitwise-repro
+  test mode), giving ≤ log2(max_batch) chunk programs;
+* join/leave are jitted row scatters with a *traced* slot index, and
+  sessions swap-remove so live rows stay compact at the front.
+
+**Sessions.** A request with ``keep=True`` leaves its pages allocated on
+completion; a later ``submit(None, n, session=sid)`` rejoins exactly
+where it left off (tokens replay bitwise at the same batch width: the
+PRNG key of position p is ``fold_in(seed, p)`` regardless of when — or
+next to whom — p is decoded; see ``serve.sampling``). ``release(sid)``
+frees a kept session.
+
+**Work accounting.** Each ``step()`` interleaves up to
+``prefill_budget`` admissions with one decode chunk, and returns the
+step's events (new tokens per request, completions) so a load generator
+can timestamp TTFT / per-token latency without reaching inside.
+Mid-chunk finishers overshoot (the chunk length is static); the surplus
+tokens are discarded — the waste is bounded by ``decode_chunk`` and is
+the price of a never-recompiling decode loop.
+
+MoE caveat: expert-capacity competition couples batch rows, so batched
+MoE decode is not bitwise identical to solo decode (dense models are).
+The scheduler serves MoE fine; the bitwise guarantee is dense-only.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.transformer import DecodeCache
+
+from . import sampling as sampling_lib
+from .engine import ServeEngine, next_pow2
+from .kvcache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished request."""
+
+    rid: int
+    session: object
+    tokens: np.ndarray            # (n_new,) int32 generated tokens
+    prompt_len: int
+    n_new: int
+    kept: bool                    # pages still allocated (resumable)
+
+
+@dataclasses.dataclass
+class StepEvents:
+    """What one ``step()`` did — the load generator's measurement hooks."""
+
+    prefilled: list               # rids whose first token appeared
+    tokens: dict                  # rid -> [new token ids] this step
+    completed: list               # Completion
+    n_active: int
+    n_queued: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    sid: object
+    samp: sampling_lib.SamplingParams
+    rem: int                      # tokens still to emit
+    t_true: int                   # real KV length (graph t may overshoot)
+    emitted: list
+    keep: bool
+    prompt_len: int
+
+
+@partial(jax.jit, donate_argnums=0)
+def _write_slot(cache, b, k, v, pos, t, tok, toks_all):
+    """Install a session into working-cache row ``b`` (traced index)."""
+    kv = cache.kv
+    kv = attn.KVCache(kv.k.at[:, b].set(k.astype(kv.k.dtype)),
+                      kv.v.at[:, b].set(v.astype(kv.v.dtype)),
+                      kv.pos.at[:, b].set(
+                          jnp.broadcast_to(pos, kv.pos.shape[::2])),
+                      kv.rolling)
+    return (DecodeCache(kv=kv, cross_kv=None, t=cache.t.at[b].set(t)),
+            toks_all.at[b].set(tok))
+
+
+@partial(jax.jit, donate_argnums=0)
+def _move_slot(cache, src, dst, toks_all):
+    """Swap-remove compaction: copy row ``src`` over row ``dst``."""
+    kv = cache.kv
+    kv = attn.KVCache(kv.k.at[:, dst].set(kv.k[:, src]),
+                      kv.v.at[:, dst].set(kv.v[:, src]),
+                      kv.pos.at[:, dst].set(kv.pos[:, src]), kv.rolling)
+    return (DecodeCache(kv=kv, cross_kv=None,
+                        t=cache.t.at[dst].set(cache.t[src])),
+            toks_all.at[dst].set(toks_all[src]))
+
+
+@jax.jit
+def _read_slot(cache, b):
+    return cache.kv.k[:, b], cache.kv.v[:, b]
+
+
+class ContinuousScheduler:
+    """Continuous-batching scheduler over a ``ServeEngine``.
+
+    Args:
+        engine: the packed-weight engine (dense decoder-only models).
+        max_batch: decode slots (power of two).
+        capacity: per-slot token capacity (prompt + output; power of
+            two, multiple of ``page_size``).
+        page_size: tokens per KV page.
+        n_pages: page-pool size; default backs every slot at full
+            capacity (kept sessions beyond that need headroom — pass
+            more).
+        prefill_budget: admissions attempted per step before the decode
+            chunk — the prefill/decode interleaving knob.
+        decode_chunk: decode steps per dispatch.
+        bucket_batch: run chunks on the pow2 bucket of live rows (True,
+            the throughput mode) or always at ``max_batch`` (False —
+            fixed shapes, the bitwise-reproducibility mode).
+        max_queue: admission control — ``submit`` beyond this many
+            waiting requests raises.
+    """
+
+    def __init__(self, engine: ServeEngine, *, max_batch: int = 8,
+                 capacity: int = 256, page_size: int = 16,
+                 n_pages: int | None = None, prefill_budget: int = 1,
+                 decode_chunk: int = 8, bucket_batch: bool = True,
+                 max_queue: int = 1024):
+        engine._require_continuous()
+        if max_batch & (max_batch - 1):
+            raise ValueError(f"max_batch must be a power of two, "
+                             f"got {max_batch}")
+        if page_size & (page_size - 1):
+            raise ValueError(f"page_size must be a power of two, "
+                             f"got {page_size}")
+        if capacity % page_size:
+            raise ValueError(f"capacity {capacity} not divisible by "
+                             f"page size {page_size}")
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.max_batch = max_batch
+        self.capacity = capacity
+        self.page_size = page_size
+        self.prefill_budget = max(prefill_budget, 1)
+        self.decode_chunk = max(decode_chunk, 1)
+        self.bucket_batch = bucket_batch
+        self.max_queue = max_queue
+        if n_pages is None:
+            n_pages = max_batch * capacity // page_size
+        self.pool = PagedKVCache(self.cfg, n_pages=n_pages,
+                                 page_size=page_size, mesh=engine.mesh)
+        # fixed-shape working cache; the scalar clock becomes per-row
+        cache = engine.api.init_cache(engine.params, max_batch, capacity)
+        self.cache = cache._replace(t=jnp.zeros((max_batch,), jnp.int32))
+        self._toks = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: list[_Slot] = []          # compact: rows [0, n_active)
+        self.queue: collections.deque = collections.deque()
+        self._sessions: dict = {}             # sid -> next token (int)
+        self._next_rid = 0
+        self._samp = {
+            "temp": np.zeros((max_batch,), np.float32),
+            "top_p": np.ones((max_batch,), np.float32),
+            "top_k": np.zeros((max_batch,), np.int32),
+            "seed": np.zeros((max_batch,), np.uint32),
+        }
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, prompt, max_new: int, *,
+               sampling: sampling_lib.SamplingParams = sampling_lib.GREEDY,
+               session=None, keep: bool = False) -> int:
+        """Queue a request; returns its rid.
+
+        ``prompt=None`` resumes a kept session (``session`` required):
+        generation continues from the session's stored state, replaying
+        the exact token stream a single longer request would produce.
+        """
+        if len(self.queue) >= self.max_queue:
+            raise RuntimeError(f"admission refused: {self.max_queue} "
+                               "requests already queued")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        sampling.validate()
+        if prompt is None:
+            if session not in self._sessions:
+                raise KeyError(f"unknown or released session {session!r}")
+            need = self.pool.length(session) + max_new
+        else:
+            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            if len(prompt) < 1:
+                raise ValueError("empty prompt")
+            need = len(prompt) + max_new
+        if need > self.capacity:
+            raise ValueError(f"request needs {need} cache slots, capacity "
+                             f"is {self.capacity}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, prompt, max_new, sampling, session, keep))
+        return rid
+
+    def release(self, session) -> None:
+        """Free a kept session's pages (it can no longer be resumed)."""
+        del self._sessions[session]
+        self.pool.free(session)
+
+    # -- lifecycle internals ------------------------------------------------
+
+    def _join(self, slot: _Slot, tok: int) -> None:
+        b = len(self.slots)
+        k, v, pos, length = self.pool.load(slot.sid, self.capacity)
+        self.cache, self._toks = _write_slot(
+            self.cache, jnp.int32(b), k, v, pos, jnp.int32(length),
+            jnp.int32(tok), self._toks)
+        for name, val in zip(self._samp,
+                             (slot.samp.temperature, slot.samp.top_p,
+                              slot.samp.top_k, slot.samp.seed)):
+            self._samp[name][b] = val
+        self.slots.append(slot)
+
+    def _leave(self, b: int) -> Completion:
+        slot = self.slots[b]
+        if slot.keep:
+            k, v = _read_slot(self.cache, jnp.int32(b))
+            self.pool.store(slot.sid, k, v, slot.t_true)
+            self._sessions[slot.sid] = int(slot.emitted[-1])
+        else:
+            self.pool.free(slot.sid)
+            self._sessions.pop(slot.sid, None)
+        last = len(self.slots) - 1
+        if b != last:
+            self.cache, self._toks = _move_slot(
+                self.cache, jnp.int32(last), jnp.int32(b), self._toks)
+            for arr in self._samp.values():
+                arr[b] = arr[last]
+            self.slots[b] = self.slots[last]
+        self.slots.pop()
+        return Completion(rid=slot.rid, session=slot.sid,
+                          tokens=np.asarray(slot.emitted, np.int32),
+                          prompt_len=slot.prompt_len,
+                          n_new=len(slot.emitted), kept=slot.keep)
+
+    def _admit_one(self, events: StepEvents) -> bool:
+        """Try to prefill+join the queue head; False if it must wait."""
+        if not self.queue or len(self.slots) >= self.max_batch:
+            return False
+        rid, prompt, max_new, samp, session, keep = self.queue[0]
+        if prompt is None:                       # resume a kept session
+            kv_len = self.pool.length(session)
+            try:
+                self.pool.extend(session, kv_len + max_new)
+            except MemoryError:
+                return False                     # wait for pages
+            self.queue.popleft()
+            tok = self._sessions[session]
+            slot = _Slot(rid=rid, sid=session, samp=samp, rem=max_new,
+                         t_true=kv_len, emitted=[], keep=keep,
+                         prompt_len=kv_len)
+            self._join(slot, tok)
+            return True
+        S = len(prompt)
+        sid = session if session is not None else ("r", rid)
+        if not self.pool.can_admit(S + max_new):
+            return False                         # wait for pages
+        self.queue.popleft()
+        self.pool.alloc(sid, S + max_new)
+        s_bucket = min(max(self.page_size, next_pow2(S)), self.capacity)
+        padded = np.zeros((1, s_bucket), np.int32)
+        padded[0, :S] = prompt
+        tok0, k, v = self.engine.prefill_session(
+            jnp.asarray(padded), S, sampling_lib.params_arrays([samp]))
+        self.pool.store(sid, k, v, S)
+        tok0 = int(tok0[0])
+        slot = _Slot(rid=rid, sid=sid, samp=samp, rem=max_new - 1,
+                     t_true=S, emitted=[tok0], keep=keep, prompt_len=S)
+        events.prefilled.append(rid)
+        events.tokens.setdefault(rid, []).append(tok0)
+        if slot.rem == 0:
+            # single-token request: never joins the decode batch — its
+            # pages already hold exactly the prompt KV, so there is no
+            # working row to sync back (and nothing to free but pages)
+            if keep:
+                self._sessions[sid] = tok0
+            else:
+                self.pool.free(sid)
+            events.completed.append(Completion(
+                rid=rid, session=sid, tokens=np.asarray([tok0], np.int32),
+                prompt_len=S, n_new=1, kept=keep))
+        else:
+            self._join(slot, tok0)
+        return True
+
+    # -- the step loop ------------------------------------------------------
+
+    def step(self) -> StepEvents:
+        """One scheduler step: up to ``prefill_budget`` admissions, then
+        one decode chunk over the live rows."""
+        events = StepEvents(prefilled=[], tokens={}, completed=[],
+                            n_active=0, n_queued=0)
+        for _ in range(self.prefill_budget):
+            if not self._admit_one(events):
+                break
+        n_active = len(self.slots)
+        if n_active:
+            bucket = min(next_pow2(n_active), self.max_batch) \
+                if self.bucket_batch else self.max_batch
+            active = jnp.arange(self.max_batch) < n_active
+            samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
+            toks, self.cache = self.engine.decode_chunk(
+                self._toks, self.cache, active, samp,
+                n_steps=self.decode_chunk, bucket=bucket)
+            self._toks = self._toks.at[:bucket].set(toks[-1])
+            host = np.asarray(toks)              # (n_steps, bucket)
+            for b, slot in enumerate(self.slots):
+                m = min(self.decode_chunk, slot.rem)
+                new = host[:m, b].tolist()
+                slot.emitted.extend(new)
+                slot.rem -= m
+                slot.t_true += m
+                events.tokens.setdefault(slot.rid, []).extend(new)
+            # leave in reverse so swap-remove never disturbs an earlier
+            # finished row we have yet to process
+            for b in range(len(self.slots) - 1, -1, -1):
+                if self.slots[b].rem == 0:
+                    events.completed.append(self._leave(b))
+        events.n_active = len(self.slots)
+        events.n_queued = len(self.queue)
+        return events
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.slots
+
+    def run_until_idle(self, max_steps: int = 100_000) -> dict:
+        """Drain queue + batch; returns {rid: Completion}."""
+        done: dict = {}
+        for _ in range(max_steps):
+            if self.idle:
+                return done
+            for c in self.step().completed:
+                done[c.rid] = c
+        raise RuntimeError(f"not idle after {max_steps} steps "
+                           f"({len(self.queue)} queued, "
+                           f"{len(self.slots)} active)")

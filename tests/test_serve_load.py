@@ -1,0 +1,444 @@
+"""Continuous-batching serving: paged KV cache, scheduler, sampling, load.
+
+The acceptance surface of the serve/ scheduler layer: batched continuous
+decoding is bitwise identical to solo decoding at the same batch width
+(greedy AND seeded sampling), kept sessions resume exactly where they
+left off, the paged pool's byte accounting returns to zero when every
+session frees, and the jit caches stay at one entry per shape bucket —
+the never-recompile contract. Plus the load-generator row schema and the
+8-device sharded-pool subprocess test.
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.serve import (GREEDY, ContinuousScheduler, PagedKVCache,
+                         SamplingParams, ServeEngine, next_pow2)
+from repro.serve import loadgen, sampling
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = configs.get_tiny("llama31-8b")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    return cfg, api, params, ServeEngine(api, params, fmt="dense")
+
+
+def _prompt(n, seed=0, vocab=256):
+    return np.random.default_rng(seed).integers(
+        0, vocab, size=n).astype(np.int32)
+
+
+def _sched(engine, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ContinuousScheduler(engine, **kw)
+
+
+def _solo(engine, prompt, n_new, samp, **kw):
+    """One request through its own scheduler (same shapes as batched)."""
+    sch = _sched(engine, bucket_batch=False, **kw)
+    rid = sch.submit(prompt, n_new, sampling=samp)
+    return sch.run_until_idle()[rid].tokens
+
+
+# -- paged KV cache -----------------------------------------------------------
+
+
+def test_paged_cache_accounting_and_leaks(tiny):
+    cfg = tiny[0]
+    pool = PagedKVCache(cfg, n_pages=8, page_size=4)
+    assert pool.used_bytes == 0 and pool.free_pages == 8
+    assert pool.capacity_bytes == 8 * pool.page_bytes
+    pool.alloc("a", 9)                      # 3 pages
+    pool.alloc("b", 4)                      # 1 page
+    assert pool.used_bytes == 4 * pool.page_bytes
+    assert pool.can_admit(16) and not pool.can_admit(17)
+    with pytest.raises(ValueError, match="already allocated"):
+        pool.alloc("a", 1)
+    with pytest.raises(MemoryError, match="exhausted"):
+        pool.alloc("c", 17)
+    assert "c" not in pool.sessions()        # failed alloc rolled back
+    assert pool.used_bytes == 4 * pool.page_bytes
+    pool.extend("b", 8)                      # grow to 2 pages
+    assert pool.used_bytes == 5 * pool.page_bytes
+    pool.free("a")
+    pool.free("b")
+    assert pool.used_bytes == 0 and pool.free_pages == 8
+
+
+def test_paged_cache_store_load_roundtrip(tiny):
+    cfg = tiny[0]
+    pool = PagedKVCache(cfg, n_pages=16, page_size=4)
+    L, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(1)
+    k_row = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+    v_row = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+    pool.alloc("s", 11)
+    pool.store("s", jnp.asarray(k_row), jnp.asarray(v_row), 11)
+    k, v, pos, length = pool.load("s", 32)   # wider slot than stored row
+    assert length == 11 and k.shape == (L, 32, kvh, dh)
+    np.testing.assert_array_equal(np.asarray(pos),
+                                  np.where(np.arange(32) < 11,
+                                           np.arange(32), -1))
+    # the live prefix survives the page round-trip bitwise; slack past
+    # the reserved pages reads the scratch page (garbage by contract)
+    np.testing.assert_array_equal(np.asarray(k)[:, :11], k_row[:, :11])
+    np.testing.assert_array_equal(np.asarray(v)[:, :11], v_row[:, :11])
+    with pytest.raises(ValueError, match="not divisible"):
+        pool.load("s", 30)
+    with pytest.raises(ValueError, match="slot"):
+        pool.load("s", 8)                    # 11 tokens don't fit 2 pages
+
+
+def test_paged_cache_defrag_preserves_sessions(tiny):
+    cfg = tiny[0]
+    pool = PagedKVCache(cfg, n_pages=12, page_size=4)
+    L, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(2)
+    rows = {}
+    for sid, n in (("a", 8), ("b", 12), ("c", 7)):
+        k = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+        v = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+        pool.alloc(sid, n)
+        pool.store(sid, jnp.asarray(k), jnp.asarray(v), n)
+        rows[sid] = (k, v, n)
+    pool.free("b")                           # punch a hole mid-pool
+    moved = pool.defrag()
+    assert moved > 0
+    live = [p for s in pool.sessions() for p in pool.page_table(s)]
+    assert sorted(live) == list(range(len(live)))   # compact at the front
+    for sid in ("a", "c"):
+        k, v, n = rows[sid]
+        got_k, got_v, _, length = pool.load(sid, 16)
+        assert length == n
+        np.testing.assert_array_equal(np.asarray(got_k)[:, :n], k[:, :n])
+        np.testing.assert_array_equal(np.asarray(got_v)[:, :n], v[:, :n])
+    assert pool.defrag() == 0                # already compact: no-op
+
+
+def test_paged_cache_rejects_non_paged_families():
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        PagedKVCache(configs.get_tiny("llama-3.2-vision-90b"),
+                     n_pages=4, page_size=4)
+
+
+# -- sampling -----------------------------------------------------------------
+
+
+def test_sampling_greedy_and_knobs():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    B = logits.shape[0]
+    want = np.asarray(jnp.argmax(logits, axis=-1))
+    pos = jnp.arange(B, dtype=jnp.int32)
+    draw = lambda **kw: np.asarray(sampling.sample_tokens(
+        logits,
+        jnp.full((B,), kw.get("temp", 0.0), jnp.float32),
+        jnp.full((B,), kw.get("top_p", 1.0), jnp.float32),
+        jnp.full((B,), kw.get("top_k", 0), jnp.int32),
+        jnp.full((B,), kw.get("seed", 0), jnp.uint32), pos))
+    np.testing.assert_array_equal(draw(), want)           # T=0 is argmax
+    np.testing.assert_array_equal(draw(temp=2.0, top_k=1), want)
+    # top-k restricts every draw to the k best ids even at high T
+    top8 = np.asarray(jnp.argsort(-logits, axis=-1))[:, :8]
+    for seed in range(8):
+        got = draw(temp=3.0, top_k=8, seed=seed)
+        assert all(got[b] in top8[b] for b in range(B))
+    # a nucleus smaller than the top token's mass collapses to argmax
+    peaked = jnp.zeros((2, 16)).at[:, 5].set(10.0)
+    got = sampling.sample_tokens(
+        peaked, jnp.full((2,), 1.0), jnp.full((2,), 0.5),
+        jnp.zeros((2,), jnp.int32), jnp.asarray([7, 9], jnp.uint32),
+        jnp.zeros((2,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), [5, 5])
+    # seeded draws are deterministic, and seeds decorrelate
+    a = [draw(temp=1.5, seed=11) for _ in range(2)]
+    np.testing.assert_array_equal(a[0], a[1])
+    others = np.stack([draw(temp=1.5, seed=s) for s in range(20, 40)])
+    assert (others != a[0]).any()
+
+
+def test_sampling_validate_and_flag_parsing():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0).validate()
+    s = sampling.parse_sample_flag("0.8,0.9,40")
+    assert (s.temperature, s.top_p, s.top_k) == (0.8, 0.9, 40)
+    s = sampling.parse_sample_flag("0.5")
+    assert (s.temperature, s.top_p, s.top_k) == (0.5, 1.0, 0)
+
+
+# -- engine: shape bucketing --------------------------------------------------
+
+
+def test_generate_jit_stable_across_prompt_lengths(tiny):
+    """generate() recompiled per exact (prompt_len, n_new) before the
+    pow2 cache bucket; now every prompt length in a bucket shares one
+    decode-scan program."""
+    _, api, params, _ = tiny
+    eng = ServeEngine(api, params, fmt="dense")
+    for S in (8, 9, 10, 11):                 # all bucket to cap 16
+        toks = np.stack([_prompt(S, seed=S), _prompt(S, seed=S + 50)])
+        out = eng.generate({"tokens": jnp.asarray(toks)}, 5)
+        assert out.tokens.shape == (2, 5)
+    (scan,) = eng._scans.values()            # one (n_steps, ...) variant
+    assert scan._cache_size() == 1
+
+
+def test_prefill_session_jit_shared_within_bucket(tiny):
+    _, api, params, engine = tiny
+    samp = sampling.params_arrays([GREEDY])
+    for S in (5, 6, 8):                      # all pad to the 8-bucket
+        padded = np.zeros((1, 8), np.int32)
+        padded[0, :S] = _prompt(S, seed=S)
+        tok0, k, v = engine.prefill_session(jnp.asarray(padded), S, samp)
+        assert tok0.shape == (1,) and k.shape[1] == 8
+    key = ("prefill_session", 8)
+    assert key in engine._fns and engine._fns[key]._cache_size() == 1
+
+
+# -- scheduler: correctness ---------------------------------------------------
+
+
+def test_batched_continuous_equals_solo_bitwise(tiny):
+    """Four concurrent requests (mixed lengths, mixed greedy/sampled)
+    produce the exact tokens each request gets when served alone at the
+    same batch width — the continuous-batching isolation guarantee."""
+    _, _, _, engine = tiny
+    reqs = [
+        (_prompt(7, seed=1), 6, GREEDY),
+        (_prompt(12, seed=2), 9, SamplingParams(temperature=0.8, seed=4)),
+        (_prompt(5, seed=3), 3, SamplingParams(temperature=1.2, top_p=0.9,
+                                               top_k=32, seed=5)),
+        (_prompt(9, seed=4), 7, GREEDY),
+    ]
+    sch = _sched(engine, bucket_batch=False)
+    rids = [sch.submit(p, n, sampling=s) for p, n, s in reqs]
+    done = sch.run_until_idle()
+    assert sch.pool.used_bytes == 0
+    for rid, (p, n, s) in zip(rids, reqs):
+        assert done[rid].n_new == n
+        np.testing.assert_array_equal(done[rid].tokens,
+                                      _solo(engine, p, n, s),
+                                      err_msg=f"request {rid}")
+
+
+def test_scheduler_matches_fixed_batch_generate(tiny):
+    """Greedy token ids through the scheduler == the fixed-batch
+    ``generate`` path on the same prompts (equal lengths, so the fixed
+    path can serve them as one batch)."""
+    _, _, _, engine = tiny
+    prompts = [_prompt(8, seed=s) for s in range(4)]
+    n_new = 6
+    want = np.asarray(engine.generate(
+        {"tokens": jnp.asarray(np.stack(prompts))}, n_new).tokens)
+    for bucket_batch in (False, True):       # repro mode and throughput mode
+        sch = _sched(engine, bucket_batch=bucket_batch, prefill_budget=4)
+        rids = [sch.submit(p, n_new) for p in prompts]
+        done = sch.run_until_idle()
+        got = np.stack([done[r].tokens for r in rids])
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"bucket_batch={bucket_batch}")
+    assert ("chunk", 4, 4) in engine.compiled_fn_keys()
+
+
+def test_session_keep_resume_equals_oneshot(tiny):
+    """A kept session resumed later replays the exact stream one longer
+    request would have produced — the PRNG key is positional."""
+    _, _, _, engine = tiny
+    prompt = _prompt(10, seed=7)
+    samp = SamplingParams(temperature=0.8, top_p=0.9, seed=3)
+    want = _solo(engine, prompt, 10, samp)
+    sch = _sched(engine, bucket_batch=False)
+    r1 = sch.submit(prompt, 4, sampling=samp, session="s0", keep=True)
+    first = sch.run_until_idle()[r1]
+    assert first.kept and sch.pool.used_bytes > 0
+    r2 = sch.submit(None, 6, sampling=samp, session="s0")   # keep=False: ends
+    second = sch.run_until_idle()[r2]
+    np.testing.assert_array_equal(
+        np.concatenate([first.tokens, second.tokens]), want)
+    assert sch.pool.used_bytes == 0          # resume with keep=False freed
+    with pytest.raises(KeyError, match="s0"):
+        sch.submit(None, 2, session="s0")
+
+
+def test_release_frees_kept_session(tiny):
+    _, _, _, engine = tiny
+    sch = _sched(engine)
+    rid = sch.submit(_prompt(6), 3, session="keepme", keep=True)
+    sch.run_until_idle()
+    assert sch.pool.used_bytes > 0
+    sch.release("keepme")
+    assert sch.pool.used_bytes == 0
+    with pytest.raises(KeyError):
+        sch.release("keepme")
+
+
+def test_single_token_request_and_page_wait(tiny):
+    """max_new=1 completes at prefill (never joins the batch); a pool too
+    small for the whole queue serves it anyway by waiting for pages —
+    and leaks nothing."""
+    _, cfg_api, params, engine = tiny
+    sch = _sched(engine, n_pages=6)          # 48 tokens: ~2 requests at once
+    rids = [sch.submit(_prompt(8, seed=s), 1 if s == 0 else 8)
+            for s in range(5)]
+    done = sch.run_until_idle()
+    assert set(done) == set(rids)
+    assert done[rids[0]].n_new == 1
+    assert sch.pool.used_bytes == 0
+
+
+def test_admission_control_and_errors(tiny):
+    _, _, _, engine = tiny
+    sch = _sched(engine, max_queue=2)
+    sch.submit(_prompt(4), 2)
+    sch.submit(_prompt(4), 2)
+    with pytest.raises(RuntimeError, match="admission refused"):
+        sch.submit(_prompt(4), 2)
+    sch.run_until_idle()
+    with pytest.raises(ValueError, match="capacity"):
+        sch.submit(_prompt(60), 8)           # 68 > capacity 64
+    with pytest.raises(ValueError, match="max_new"):
+        sch.submit(_prompt(4), 0)
+    with pytest.raises(KeyError, match="unknown"):
+        sch.submit(None, 2, session="nope")
+    with pytest.raises(ValueError, match="power of two"):
+        ContinuousScheduler(engine, max_batch=3)
+    with pytest.raises(ValueError, match="divisible"):
+        ContinuousScheduler(engine, capacity=60, page_size=8)
+
+
+def test_continuous_unsupported_families_raise():
+    cfg = configs.get_tiny("zamba2-7b")
+    api = models.build(cfg)
+    eng = ServeEngine(api, api.init(jax.random.key(0)), fmt="dense")
+    assert not eng.supports_continuous
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        ContinuousScheduler(eng)
+
+
+# -- load generator + bench schema --------------------------------------------
+
+
+def _check_mod():
+    spec = importlib.util.spec_from_file_location(
+        "check_serve_bench",
+        Path(__file__).resolve().parents[1] / "benchmarks"
+        / "check_serve_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_load_rows_schema_and_invariants(tiny):
+    _, api, params, _ = tiny
+    load = loadgen.LoadConfig(duration_s=0.25, prompt_len=(4, 8),
+                              output_len=(2, 6))
+    rows = loadgen.bench_load_rows(
+        api, params, None, formats=("dense",), rates=(32.0,), load=load,
+        max_batch=4, capacity=32, page_size=8, decode_chunk=2)
+    assert {r["mode"] for r in rows} == {"continuous", "fixed"}
+    for r in rows:
+        assert r["completed"] == r["n_requests"] > 0
+        assert r["goodput_tok_s"] <= r["offered_tok_s"] * (1 + 1e-9)
+        assert 0 <= r["p50_ttft_s"] <= r["p99_ttft_s"]
+        assert r["kernel_used"] == "dense"
+    mod = _check_mod()
+    doc = {"arch": "tiny", "batch": 4, "prompt_len": 8, "gen": 4,
+           "devices": 1, "rows": rows}
+    assert mod.check(doc, max_nm24_prefill_ratio=50.0) == []
+    # load rows live alongside per-phase rows; merge replaces only them
+    doc["rows"] = [{"variant": "dense", "phase": "decode"}] + rows[:1]
+    loadgen.merge_load_rows(doc, rows)
+    assert doc["rows"][0]["phase"] == "decode" and len(doc["rows"]) == \
+        1 + len(rows)
+    # the guard catches a goodput > offered violation
+    bad = dict(rows[0])
+    bad["goodput_tok_s"] = bad["offered_tok_s"] * 2
+    errs = mod.check({**doc, "rows": [bad]}, max_nm24_prefill_ratio=50.0)
+    assert any("exceeds offered" in e for e in errs)
+    # --require-continuous-wins needs both modes per (variant, rate)
+    errs = mod.check({**doc, "rows": [r for r in rows
+                                      if r["mode"] == "continuous"]},
+                     max_nm24_prefill_ratio=50.0,
+                     require_continuous_wins=True)
+    assert any("need both" in e for e in errs)
+
+
+def test_make_workload_deterministic():
+    cfg = loadgen.LoadConfig(arrival_rate=20.0, duration_s=1.0, seed=5)
+    a, b = loadgen.make_workload(cfg), loadgen.make_workload(cfg)
+    assert len(a) == len(b) > 0
+    for x, y in zip(a, b):
+        assert x.arrival == y.arrival and x.max_new == y.max_new
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[-1] < cfg.duration_s
+    for r in a:
+        assert cfg.prompt_len[0] <= len(r.prompt) <= cfg.prompt_len[1]
+        assert cfg.output_len[0] <= r.max_new <= cfg.output_len[1]
+
+
+# -- mesh ---------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_mesh_sharded_paged_serving_matches_single_device():
+    """8-device host mesh: the paged pool shards its kv-head dim over
+    "model" (dist.specs.page_pspecs) and the continuous scheduler serves
+    the same greedy tokens as the fixed-batch path on the same mesh."""
+    code = """
+        import numpy as np, jax
+        import jax.numpy as jnp
+        import repro.configs as configs, repro.models as models
+        from repro.launch import mesh as mesh_lib
+        from repro.serve import ContinuousScheduler, ServeEngine
+
+        assert len(jax.devices()) == 8
+        mesh = mesh_lib.make_host_mesh(data=4, model=2)
+        cfg = configs.get_tiny("llama31-8b")
+        api = models.build(cfg)
+        params = api.init(jax.random.key(0))
+        eng = ServeEngine(api, params, fmt="dense", mesh=mesh)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+                   for _ in range(4)]
+        want = np.asarray(eng.generate(
+            {"tokens": jnp.asarray(np.stack(prompts))}, 5).tokens)
+        sch = ContinuousScheduler(eng, max_batch=4, capacity=32,
+                                  page_size=8, decode_chunk=4,
+                                  prefill_budget=4)
+        assert len(sch.pool.k.sharding.device_set) == 8, \\
+            "paged pool not sharded over the mesh"
+        rids = [sch.submit(p, 5) for p in prompts]
+        done = sch.run_until_idle()
+        got = np.stack([done[r].tokens for r in rids])
+        np.testing.assert_array_equal(got, want)
+        assert sch.pool.used_bytes == 0
+        print("MESH-PAGED OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "MESH-PAGED OK" in out.stdout
