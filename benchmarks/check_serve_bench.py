@@ -13,13 +13,21 @@ bench holds the tighter 1.5 acceptance ratio.
 
 ``phase == "load"`` rows (the ``serve_load.py`` arrival-rate sweep) are
 validated separately: p50/p99 TTFT and per-token latency present and
-ordered, goodput ≤ offered load (an accounting invariant — delivered
-tokens can never exceed requested tokens over the same makespan), and
-``kernel_used`` tagged. ``--require-continuous-wins`` additionally
-demands that wherever a (variant, arrival_rate) pair carries both
-modes, continuous batching's goodput strictly beats the fixed-batch
-path — the acceptance bar for the committed run, off by default for CI
-smoke regenerations where timing variance is real.
+ordered, the TTFT breakdown (``queue_wait`` + ``prefill``) present,
+ordered, and summing to TTFT in the mean (an exact per-request identity
+in the generator, so the means must agree to float tolerance), goodput
+≤ offered load (an accounting invariant — delivered tokens can never
+exceed requested tokens over the same makespan), waste/shipping
+counters non-negative, and ``kernel_used`` tagged.
+``--require-continuous-wins`` additionally demands that wherever a
+(variant, arrival_rate) pair carries both modes, continuous batching's
+goodput strictly beats the fixed-batch path; ``--require-disagg-wins``
+demands that at each variant's HIGHEST swept arrival rate (the
+saturating point) the disaggregated rows beat the continuous baseline
+on p99 TTFT at equal-or-better goodput (within a 2% noise band — the
+two modes share the same decode plateau). Both are acceptance bars for
+the committed run, off by default for CI smoke regenerations where
+timing variance is real.
 """
 from __future__ import annotations
 
@@ -37,8 +45,11 @@ PHASE_KEYS = {"prefill": {"prefill_s"}, "decode": {"cold_tok_s"}}
 LOAD_KEYS = {"mode", "arrival_rate", "duration_s", "seed", "n_requests",
              "completed", "makespan_s", "offered_tok_s", "goodput_tok_s",
              "p50_ttft_s", "p99_ttft_s", "p50_tok_latency_s",
-             "p99_tok_latency_s"}
-LOAD_MODES = {"continuous", "fixed"}
+             "p99_tok_latency_s", "p50_queue_wait_s", "p99_queue_wait_s",
+             "p50_prefill_s", "p99_prefill_s", "mean_ttft_s",
+             "mean_queue_wait_s", "mean_prefill_s",
+             "wasted_decode_tokens", "shipped_bytes"}
+LOAD_MODES = {"continuous", "fixed", "disaggregated"}
 
 
 def _check_load_row(i: int, r: dict, errs: list) -> None:
@@ -55,14 +66,29 @@ def _check_load_row(i: int, r: dict, errs: list) -> None:
         errs.append(f"{tag}: goodput {r['goodput_tok_s']:.1f} tok/s "
                     f"exceeds offered load {r['offered_tok_s']:.1f}")
     for a, b in (("p50_ttft_s", "p99_ttft_s"),
-                 ("p50_tok_latency_s", "p99_tok_latency_s")):
+                 ("p50_tok_latency_s", "p99_tok_latency_s"),
+                 ("p50_queue_wait_s", "p99_queue_wait_s"),
+                 ("p50_prefill_s", "p99_prefill_s")):
         if r[a] < 0 or r[b] < r[a]:
             errs.append(f"{tag}: want 0 <= {a} <= {b}, got "
                         f"{r[a]:.4f} / {r[b]:.4f}")
+    parts = r["mean_queue_wait_s"] + r["mean_prefill_s"]
+    if abs(parts - r["mean_ttft_s"]) > 1e-6 + 1e-4 * abs(r["mean_ttft_s"]):
+        errs.append(f"{tag}: TTFT breakdown does not sum — "
+                    f"queue_wait {r['mean_queue_wait_s']:.6f} + prefill "
+                    f"{r['mean_prefill_s']:.6f} != ttft "
+                    f"{r['mean_ttft_s']:.6f} (mean)")
+    for k in ("wasted_decode_tokens", "shipped_bytes"):
+        if r[k] < 0:
+            errs.append(f"{tag}: {k} negative ({r[k]})")
+    if r["mode"] != "disaggregated" and r["shipped_bytes"] != 0:
+        errs.append(f"{tag}: shipped_bytes {r['shipped_bytes']} outside "
+                    "disaggregated mode")
 
 
 def check(doc: dict, *, max_nm24_prefill_ratio: float,
-          require_continuous_wins: bool = False) -> list[str]:
+          require_continuous_wins: bool = False,
+          require_disagg_wins: bool = False) -> list[str]:
     errs = []
     missing = DOC_KEYS - doc.keys()
     if missing:
@@ -129,6 +155,32 @@ def check(doc: dict, *, max_nm24_prefill_ratio: float,
                     f"continuous batching does not win for {v!r}@{rate}: "
                     f"{cont['goodput_tok_s']:.1f} <= "
                     f"{fixed['goodput_tok_s']:.1f} tok/s goodput")
+    if require_disagg_wins:
+        variants = {v for v, m, _ in load_by if m == "disaggregated"}
+        if not variants:
+            errs.append("--require-disagg-wins: no disaggregated load "
+                        "rows in doc")
+        for v in sorted(variants):
+            rate = max(r for vv, m, r in load_by
+                       if vv == v and m == "disaggregated")
+            dis = load_by.get((v, "disaggregated", rate))
+            cont = load_by.get((v, "continuous", rate))
+            if cont is None:
+                errs.append(f"disagg sweep for {v!r}@{rate}: no continuous "
+                            "baseline row at the same rate")
+            else:
+                if dis["p99_ttft_s"] >= cont["p99_ttft_s"]:
+                    errs.append(
+                        f"disaggregation does not cut p99 TTFT for "
+                        f"{v!r}@{rate}: {dis['p99_ttft_s']:.4f} >= "
+                        f"{cont['p99_ttft_s']:.4f} s")
+                # "equal-or-better" up to bench noise: goodputs at the
+                # saturation plateau differ by well under 1% run to run
+                if dis["goodput_tok_s"] < cont["goodput_tok_s"] * 0.98:
+                    errs.append(
+                        f"disaggregation loses goodput for {v!r}@{rate}: "
+                        f"{dis['goodput_tok_s']:.1f} < "
+                        f"{cont['goodput_tok_s']:.1f} tok/s")
     return errs
 
 
@@ -140,10 +192,15 @@ def main(argv=None):
     ap.add_argument("--require-continuous-wins", action="store_true",
                     help="fail unless continuous goodput strictly beats "
                          "fixed at every (variant, rate) with both modes")
+    ap.add_argument("--require-disagg-wins", action="store_true",
+                    help="fail unless disaggregated serving beats the "
+                         "continuous baseline on p99 TTFT at equal-or-"
+                         "better goodput at each variant's highest rate")
     args = ap.parse_args(argv)
     doc = json.loads(Path(args.path).read_text())
     errs = check(doc, max_nm24_prefill_ratio=args.max_nm24_prefill_ratio,
-                 require_continuous_wins=args.require_continuous_wins)
+                 require_continuous_wins=args.require_continuous_wins,
+                 require_disagg_wins=args.require_disagg_wins)
     if errs:
         for e in errs:
             print(f"FAIL: {e}", file=sys.stderr)
@@ -152,7 +209,8 @@ def main(argv=None):
     n_load = sum(1 for r in doc["rows"] if r.get("phase") == "load")
     print(f"ok: {args.path} — {n} rows ({n_load} load), schema + nm24 "
           f"prefill ratio <= {args.max_nm24_prefill_ratio}x"
-          + (", continuous wins" if args.require_continuous_wins else ""))
+          + (", continuous wins" if args.require_continuous_wins else "")
+          + (", disagg wins" if args.require_disagg_wins else ""))
     return 0
 
 

@@ -10,13 +10,19 @@ packed serving variant twice per arrival rate:
 * ``fixed``      — the baseline ``ServeEngine.generate`` path: queued
   requests must share one prompt length per call and the whole batch
   decodes the pow2 bucket of the group's longest output.
+* ``disaggregated`` (``--disaggregate``) — prefill into its own page
+  pool with chunked fixed-shape windows (``--prefill-chunk``), ship
+  sessions page-granular to the decode pool on join, admit ahead of
+  free decode slots.
 
 Each (variant, mode, arrival_rate) cell becomes one ``phase == "load"``
 row merged into ``BENCH_serve.json`` (or ``--out``) next to the
-per-phase prefill/decode rows: offered vs goodput tok/s, p50/p99 TTFT,
-p50/p99 per-token latency, and the kernel the decode trace actually
-lowered. ``benchmarks/check_serve_bench.py --require-continuous-wins``
-is the acceptance gate on the committed doc.
+per-phase prefill/decode rows: offered vs goodput tok/s, p50/p99 TTFT
+with its queue-wait/prefill breakdown, p50/p99 per-token latency,
+wasted decode tokens, shipped KV bytes, and the kernel the decode trace
+actually lowered. ``benchmarks/check_serve_bench.py
+--require-continuous-wins --require-disagg-wins`` is the acceptance
+gate on the committed doc.
 """
 from __future__ import annotations
 
@@ -30,8 +36,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="llama31-8b")
     ap.add_argument("--batch", type=int, default=8,
                     help="decode slots (continuous) / batch size (fixed)")
-    ap.add_argument("--rates", default="4,16",
-                    help="comma-separated arrival rates (requests/s)")
+    ap.add_argument("--rates", default="16,128",
+                    help="comma-separated arrival rates (requests/s); the "
+                         "committed doc sweeps 16 (light) and 128 "
+                         "(saturating)")
     ap.add_argument("--duration", type=float, default=2.0,
                     help="simulated arrival window in seconds")
     ap.add_argument("--prompt-len", default="8:24", metavar="MIN:MAX")
@@ -39,6 +47,10 @@ def main(argv=None):
     ap.add_argument("--t-max", type=int, default=20)
     ap.add_argument("--n-calib", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="also sweep the disaggregated prefill/decode mode")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill window (pow2) for --disaggregate")
     ap.add_argument("--out", default=None,
                     help="write the bench json here instead of the repo "
                          "root (CI smoke)")
@@ -59,6 +71,8 @@ def main(argv=None):
               load_duration=args.duration, load_seed=args.seed,
               load_prompt_len=span(args.prompt_len),
               load_output_len=span(args.output_len),
+              disaggregate=args.disaggregate,
+              prefill_chunk=args.prefill_chunk,
               bench_out=Path(args.out) if args.out else None)
 
 

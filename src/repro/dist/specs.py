@@ -155,6 +155,40 @@ def page_pspecs(cfg: ArchConfig, pages: Any, mesh) -> Any:
     return jax.tree.map(leaf, pages)
 
 
+def mesh_slices(mesh, *, axis: str = "data",
+                first: int | None = None) -> tuple:
+    """Carve a mesh into two disjoint submeshes along a named axis.
+
+    The disaggregated-serving placement primitive: prefill
+    (compute-bound) and decode (bytes-bound) pools live on separate
+    device slices of one physical mesh, and KV pages ship between them
+    (``serve.kvcache.ship_pages``). Splitting along a *data-parallel*
+    axis keeps the "model" axis intact in both slices, so each pool
+    still shards its kv-head dim over "model" exactly as before —
+    ``page_pspecs`` applies unchanged on either slice.
+
+    Returns ``(first_slice, second_slice)`` — ``first`` devices along
+    ``axis`` vs the rest (default an even split). Both slices keep the
+    parent's axis names; axis sizes shrink accordingly.
+    """
+    from jax.sharding import Mesh
+
+    names = tuple(mesh.axis_names)
+    if axis not in names:
+        raise ValueError(f"mesh has no axis {axis!r} (axes: {names})")
+    n = mesh.shape[axis]
+    if n < 2:
+        raise ValueError(f"cannot slice axis {axis!r} of size {n} in two")
+    first = n // 2 if first is None else int(first)
+    if not 0 < first < n:
+        raise ValueError(f"need 0 < first < {n} along {axis!r}, "
+                         f"got {first}")
+    ax = names.index(axis)
+    devs = mesh.devices
+    take = lambda lo, hi: devs.take(range(lo, hi), axis=ax)
+    return Mesh(take(0, first), names), Mesh(take(first, n), names)
+
+
 def batch_pspecs(cfg: ArchConfig, batch: Any, mesh) -> Any:
     """Input-batch specs: leading dim over the DP axes, rest replicated."""
     ms = mesh.shape

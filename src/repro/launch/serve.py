@@ -45,9 +45,10 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
           masks_from: str | None = None, fmt: str | None = None,
           kernel: str = "auto", mesh: str | None = None, seed: int = 0,
           bench: bool = False, bench_out: Path | None = None,
-          sample=None, load_bench: bool = False, load_rates=(4.0, 16.0),
+          sample=None, load_bench: bool = False, load_rates=(16.0, 128.0),
           load_duration: float = 2.0, load_seed: int = 0,
           load_prompt_len=(8, 24), load_output_len=(4, 16),
+          disaggregate: bool = False, prefill_chunk: int | None = None,
           verbose: bool = True) -> dict:
     """Serve a batch of prompts; returns tokens + timing (+ bench rows).
 
@@ -60,7 +61,10 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
     None). ``load_bench`` runs the continuous-vs-fixed load-generator
     sweep (``serve.loadgen``) over ``load_rates`` arrivals/s and merges
     the ``phase == "load"`` rows into the bench doc — the ``--bench``
-    per-phase rows are left untouched.
+    per-phase rows are left untouched. ``disaggregate`` adds a third
+    sweep mode: prefill into its own page pool, ship sessions to the
+    decode pool on join (``prefill_chunk`` sets the chunked-prefill
+    window width for that mode).
     """
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
@@ -134,11 +138,15 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
             prompt_len=tuple(load_prompt_len),
             output_len=tuple(load_output_len),
             sampling=sample if sample is not None else GREEDY)
+        modes = ("continuous", "fixed")
+        if disaggregate:
+            modes += ("disaggregated",)
         load_rows = loadgen.bench_load_rows(
             api, params, mask_src,
             formats=_servable(formats, api, params_srv, mask_src),
             rates=tuple(load_rates), load=load_cfg, kernel=kernel,
-            mesh=mesh_obj, masked_params=params_srv, max_batch=batch)
+            mesh=mesh_obj, masked_params=params_srv, max_batch=batch,
+            modes=modes, prefill_chunk=prefill_chunk)
         path = bench_out or BENCH_OUT
         doc = json.loads(path.read_text()) if path.exists() else {
             "arch": arch, "batch": batch, "prompt_len": prompt_len,
@@ -148,11 +156,13 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
         out["load_bench"] = load_rows
         if verbose:
             for r in load_rows:
-                print(f"  {r['variant']:8s} {r['mode']:10s} "
+                print(f"  {r['variant']:8s} {r['mode']:13s} "
                       f"rate {r['arrival_rate']:5.1f}/s  goodput "
-                      f"{r['goodput_tok_s']:8.1f} tok/s  p50 TTFT "
-                      f"{r['p50_ttft_s']*1e3:7.1f} ms  p99 "
-                      f"{r['p99_ttft_s']*1e3:7.1f} ms  "
+                      f"{r['goodput_tok_s']:8.1f} tok/s  p99 TTFT "
+                      f"{r['p99_ttft_s']*1e3:7.1f} ms (wait "
+                      f"{r['p99_queue_wait_s']*1e3:7.1f} + prefill "
+                      f"{r['p99_prefill_s']*1e3:6.1f})  waste "
+                      f"{r['wasted_decode_tokens']:5d}  "
                       f"[{r['kernel_used']}]")
             print(f"wrote {path}")
     return out
@@ -202,7 +212,7 @@ def main(argv=None):
                     help="run the continuous-vs-fixed load-generator "
                          "sweep and merge phase='load' rows into the "
                          "bench doc")
-    ap.add_argument("--load-rates", default="4,16",
+    ap.add_argument("--load-rates", default="16,128",
                     help="comma-separated arrival rates (requests/s)")
     ap.add_argument("--load-duration", type=float, default=2.0,
                     help="simulated arrival window in seconds")
@@ -211,6 +221,12 @@ def main(argv=None):
                     help="uniform prompt-length bounds for the workload")
     ap.add_argument("--load-output-len", default="4:16", metavar="MIN:MAX",
                     help="uniform output-length bounds for the workload")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="add the disaggregated prefill/decode mode to "
+                         "the load sweep (separate pools, page shipping)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill window width (power of two) for "
+                         "the disaggregated mode")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     from repro.serve.sampling import parse_sample_flag
@@ -225,7 +241,8 @@ def main(argv=None):
           load_rates=tuple(float(r) for r in args.load_rates.split(",")),
           load_duration=args.load_duration, load_seed=args.load_seed,
           load_prompt_len=span(args.load_prompt_len),
-          load_output_len=span(args.load_output_len))
+          load_output_len=span(args.load_output_len),
+          disaggregate=args.disaggregate, prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ class ModelApi:
     prefill: Callable
     decode_step: Callable
     module: Any
+    prefill_window: Callable | None = None   # chunked-prefill continuation
 
 
 def build(cfg: ArchConfig) -> ModelApi:
@@ -61,6 +62,10 @@ def build(cfg: ArchConfig) -> ModelApi:
         decode_step=lambda p, tok, cache, masks=None: mod.decode_step(
             p, tok, cfg, cache, masks=masks),
         module=mod,
+        prefill_window=(
+            (lambda p, b, cache, masks=None: mod.prefill_window(
+                p, b, cfg, cache, masks=masks))
+            if hasattr(mod, "prefill_window") else None),
     )
 
 

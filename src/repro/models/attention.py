@@ -227,6 +227,59 @@ def self_attention(p, x, positions, cfg, *, masks=None, taps=None,
     return out, new_cache
 
 
+def window_attention(p, x, offset, cfg, cache: KVCache, *, masks=None,
+                     taps=None):
+    """Windowed-prefill continuation: a W-token window against prior KV.
+
+    x: (B, W, d) — the prompt slice at absolute positions
+    ``[offset, offset + W)``; ``offset`` is a *traced* () int32 so every
+    window of a chunked prefill shares one compiled program. The cache
+    already holds KV for positions ``[0, offset)`` (gathered pages or
+    the previous windows of this same continuation); the window's KV is
+    written at slots ``[offset, offset + W)`` first, then the window's
+    queries attend over the WHOLE cache — prior pages plus the window —
+    with the positional mask doing the causal/empty-slot filtering.
+
+    Bitwise contract: every per-row reduction here has the same length
+    as the one-shot prefill over the same cache capacity (the score and
+    prob@v contractions run over all ``s_max`` key slots; empty slots
+    carry pos = -1, mask to an exact exp() underflow, and contribute
+    exact zeros), so chunked prefill reproduces one-shot prefill's
+    hidden states bit for bit — the ``serve.engine.prefill_chunk``
+    equality the scheduler's chunked admission path is built on.
+
+    Only fixed (non-rolling) caches are supported: a window past
+    ``s_max`` has nowhere to live.
+    """
+    B, W = x.shape[:2]
+    q = _proj_q(p, x, cfg, masks, taps)
+    k, v = _proj_kv(p, x, cfg, masks, taps)
+    pos_w = jnp.asarray(offset, jnp.int32) + jnp.arange(W, dtype=jnp.int32)
+    q = common.apply_rope(q, pos_w[None, :], pct=cfg.rope_pct,
+                          theta=cfg.rope_theta)
+    k = common.apply_rope(k, pos_w[None, :], pct=cfg.rope_pct,
+                          theta=cfg.rope_theta)
+
+    off = jnp.asarray(offset, jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, off, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, off, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cache.pos, jnp.broadcast_to(pos_w, (B, W)), (0, off))
+    new_cache = KVCache(ck, cv, cpos, cache.rolling)
+
+    kf = _repeat_kv(ck, cfg.n_heads)
+    vf = _repeat_kv(cv, cfg.n_heads)
+    # (B, W, s_max): per-row key positions (prior windows' slots hold
+    # their absolute positions, untouched slots hold -1)
+    mask = _scores_mask(pos_w, cpos, causal=True, window=cfg.sliding_window)
+    out = _sdpa(q, kf, vf, mask)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
+    out = dense(out, p["wo"], mask=_m(masks, "wo"), tap="wo", taps=taps)
+    return out, new_cache
+
+
 def decode_attention(p, x, t, cfg, cache: KVCache, *, masks=None, taps=None):
     """One-token self attention against a cache.
 

@@ -120,6 +120,12 @@ def decoder_layer(p, x, positions, cfg, *, masks=None, want_taps=False,
     if mode == "decode":
         a, new_cache = attn.decode_attention(p["attn"], h, t, cfg, cache,
                                              masks=am, taps=taps)
+    elif mode == "window":
+        # chunked-prefill continuation: ``t`` carries the traced window
+        # offset (the absolute position of the window's first token)
+        a, new_cache = attn.window_attention(p["attn"], h, t, cfg, cache,
+                                             masks=am, taps=taps)
+        a = constrain(a, "batch", "seq", None)
     else:
         a, new_cache = attn.self_attention(p["attn"], h, positions, cfg,
                                            masks=am, taps=taps, cache=cache,
@@ -371,6 +377,48 @@ def _finish_prefill(new_kv, x, S: int, n_valid):
     # future query (the decode steps then overwrite them in order)
     new_kv = new_kv._replace(pos=jnp.where(new_kv.pos < nv, new_kv.pos, -1))
     return new_kv, nv, jax.lax.dynamic_slice_in_dim(x, nv - 1, 1, axis=1)
+
+
+def prefill_window(params, batch, cfg, cache: DecodeCache, *, masks=None):
+    """One fixed-width window of a chunked prefill. Returns (logits, cache).
+
+    ``batch`` carries ``tokens`` (B, W) — the prompt slice at absolute
+    positions ``[offset, offset + W)`` — plus traced () int32 scalars
+    ``offset`` (window start) and ``n_valid`` (total real prompt
+    length). The cache must already hold KV for ``[0, offset)``; this
+    writes the window's KV and attends over prior slots + the window
+    (``attention.window_attention``), so driving ⌈S/W⌉ windows over a
+    prompt reproduces one-shot ``prefill`` bit for bit — same per-row
+    reduction lengths, empty slots contribute exact zeros.
+
+    Every call returns the logits at the LAST REAL prompt position seen
+    so far (``min(n_valid, offset + W) - 1``) and masks written pad
+    slots (pos >= n_valid) to -1, so only the final window's logits are
+    meaningful for sampling — earlier windows' logits are a by-product
+    (one lm_head row) the caller ignores. ``cache.t`` advances to the
+    window end, clamped to ``n_valid``.
+    """
+    tokens = batch["tokens"]
+    B, W = tokens.shape
+    offset = jnp.asarray(batch["offset"], jnp.int32)
+    n_valid = jnp.asarray(batch["n_valid"], jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    x, new_kv, _, _ = _scan_layers(params, x, None, cfg, masks=masks,
+                                   want_taps=False, mode="window",
+                                   cache=cache.kv, t=offset)
+    # pad slots (final partial window) were written with pos >= n_valid;
+    # -1 hides them from every future window/decode query
+    new_kv = new_kv._replace(pos=jnp.where(new_kv.pos < n_valid,
+                                           new_kv.pos, -1))
+    # last real hidden state within this window (clamped: pad-tail rows
+    # of the final window sit past it)
+    idx = jnp.clip(jnp.minimum(n_valid, offset + W) - 1 - offset, 0, W - 1)
+    x_last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+    x_last = _apply_norm(params["ln_f"], x_last, cfg)
+    t_next = jnp.minimum(offset + W, n_valid)
+    return lm_head(params, x_last, cfg), DecodeCache(
+        kv=new_kv, cross_kv=cache.cross_kv, t=t_next)
 
 
 def decode_step(params, token, cfg, cache: DecodeCache, *, masks=None):

@@ -375,6 +375,54 @@ class ServeEngine:
         self._note_kernels("prefill", rec)
         return out
 
+    def prefill_chunk(self, tokens: jnp.ndarray, offset: int, n_valid: int,
+                      cache, samp: dict):
+        """One fixed-width window of a chunked prefill (B=1).
+
+        ``tokens`` is (1, W) int32 — the prompt slice at absolute
+        positions ``[offset, offset + W)`` (the final window right-pads
+        past ``n_valid``); ``cache`` is the session's continuation cache
+        (B=1, capacity = the prompt's pow2 bucket) holding the previous
+        windows' KV. Returns ``(tok0 (1,) int32, cache')`` — the token
+        sampled from the last real position seen so far (only the FINAL
+        window's ``tok0`` is the request's first token; earlier windows'
+        are a one-row lm_head by-product the scheduler ignores).
+
+        Compiled once per (W, capacity): ``offset`` and ``n_valid`` are
+        traced scalars, so every window of every prompt in a bucket
+        shares the jit, and the cache buffers are donated between
+        windows. Driving ⌈S/W⌉ windows is bitwise-identical to one
+        ``prefill_session`` call over the same bucket — same per-row
+        reduction lengths, masked slots contribute exact zeros (see
+        ``models.attention.window_attention``).
+        """
+        self._require_continuous()
+        if self.api.prefill_window is None:
+            raise NotImplementedError(
+                f"{self.cfg.name!r} has no windowed-prefill continuation")
+        w = tokens.shape[1]
+        capacity = cache.kv.k.shape[2]
+        key = ("prefill_chunk", w, capacity)
+        if key not in self._fns:
+            def fn(params, tokens, offset, n_valid, cache, samp):
+                logits, cache = self.api.prefill_window(
+                    params, {"tokens": tokens, "offset": offset,
+                             "n_valid": n_valid}, cache, masks=self.masks)
+                tok0 = sampling_lib.sample_tokens(
+                    logits[:, -1], samp["temp"], samp["top_p"],
+                    samp["top_k"], samp["seed"], n_valid)
+                return tok0, cache
+
+            self._fns[key] = jax.jit(fn, donate_argnums=4)
+        with self._ctx(), common.use_matmul_policy(self._policy):
+            with spmm.record_dispatch() as rec:
+                tok0, cache = self._fns[key](
+                    self.params, tokens, jnp.int32(offset),
+                    jnp.int32(n_valid), cache, samp)
+            jax.block_until_ready(tok0)
+        self._note_kernels("prefill", rec)
+        return tok0, cache
+
     def decode_chunk(self, tok: jnp.ndarray, cache, active: jnp.ndarray,
                      samp: dict, *, n_steps: int, bucket: int):
         """Run ``n_steps`` decode steps on rows ``[:bucket]`` of a

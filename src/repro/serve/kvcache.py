@@ -124,6 +124,10 @@ class PagedKVCache:
         self._free: list[int] = list(range(n_pages))   # min-heap of page ids
         heapq.heapify(self._free)
         self._table: dict = {}
+        # inter-pool transfer accounting (see ``ship_pages``): real page
+        # bytes that left / entered this pool, scratch padding excluded
+        self.shipped_bytes_out = 0
+        self.shipped_bytes_in = 0
 
     # -- accounting ---------------------------------------------------------
 
@@ -149,6 +153,11 @@ class PagedKVCache:
     def can_admit(self, n_tokens: int) -> bool:
         """Would ``alloc(sid, n_tokens)`` succeed right now?"""
         return self.pages_for(n_tokens) <= len(self._free)
+
+    def can_extend(self, sid, n_tokens: int) -> bool:
+        """Would ``extend(sid, n_tokens)`` succeed right now?"""
+        need = self.pages_for(n_tokens) - len(self._table[sid].pages)
+        return need <= len(self._free)
 
     def sessions(self) -> list:
         return list(self._table)
@@ -230,8 +239,25 @@ class PagedKVCache:
         pids = self._padded_pids(sess, length, k_row.shape[1])
         kp = common.rows_to_pages(k_row, self.page_size, axis=1)
         vp = common.rows_to_pages(v_row, self.page_size, axis=1)
+        kp, vp = self._place(kp, vp)
         self.k, self.v = _scatter_pages(self.k, self.v, kp, vp, pids)
         sess.length = int(length)
+
+    def _place(self, kp, vp):
+        """Put a page block onto this pool's mesh slice before a scatter.
+
+        A pool on its own mesh slice (disaggregated serving) receives
+        rows computed on a DIFFERENT device set; jit refuses inputs
+        committed to two device sets, so the block is explicitly
+        transferred first. With no mesh this is a no-op — single-pool
+        callers keep their zero-copy path.
+        """
+        if self.mesh is None:
+            return kp, vp
+        from repro.dist import specs as specs_lib
+        sh = specs_lib.named(self.mesh, specs_lib.page_pspecs(
+            self.cfg, {"k": kp, "v": vp}, self.mesh))
+        return jax.device_put(kp, sh["k"]), jax.device_put(vp, sh["v"])
 
     def load(self, sid, capacity: int):
         """Gather ``sid``'s pages into dense rows of ``capacity`` tokens.
@@ -270,3 +296,55 @@ class PagedKVCache:
         self._free = list(range(len(live), self.n_pages))
         heapq.heapify(self._free)
         return moved
+
+
+# ---------------------------------------------------------------------------
+# inter-pool transport (disaggregated serving)
+# ---------------------------------------------------------------------------
+
+def ship_pages(src: PagedKVCache, dst: PagedKVCache, sid, *,
+               capacity: int, dst_sid=None) -> int:
+    """Move a session's KV pages from one pool to another; returns bytes.
+
+    The transport unit of prefill/decode disaggregation: a session
+    prefilled into the prefill pool (one mesh slice) ships to the decode
+    pool (another slice) before it may join the decode batch. The
+    transfer is FIXED-SHAPE and page-granular — the source pages gather
+    scratch-padded to ``capacity // page_size`` page slots (exactly the
+    ``load`` discipline), the block is ``device_put`` onto the
+    destination pool's placement, and a scratch-padded scatter installs
+    it — so shipping compiles ONE program per slot width regardless of
+    how many pages a session actually holds. Scatters aimed at either
+    scratch page are discarded by construction.
+
+    Only *real* pages count in the byte ledger: ``src.shipped_bytes_out``
+    and ``dst.shipped_bytes_in`` both grow by ``pages · page_bytes``.
+    The destination session (``dst_sid``, default the same id) is
+    allocated here for exactly the session's stored length — callers
+    growing it (prompt + output budget) extend it afterwards; on an
+    exhausted destination pool the MemoryError propagates BEFORE any
+    state changes, so the source session stays intact and shippable
+    later. The source pages are freed once the scatter lands.
+    """
+    if src.page_size != dst.page_size:
+        raise ValueError(f"page-size mismatch: src {src.page_size}, "
+                         f"dst {dst.page_size}")
+    sess = src._table[sid]
+    dst_sid = sid if dst_sid is None else dst_sid
+    n_tokens = sess.length
+    dst.alloc(dst_sid, n_tokens)             # raises before any mutation
+    n_used = src.pages_for(n_tokens)
+    src_pids = src._padded_pids(sess, n_tokens, capacity)
+    kp, vp = src.k[:, src_pids], src.v[:, src_pids]
+    kp, vp = dst._place(kp, vp)
+    d = dst._table[dst_sid]
+    dst_pids = jnp.asarray(
+        d.pages + [dst.scratch_page] * (len(src_pids) - len(d.pages)),
+        jnp.int32)
+    dst.k, dst.v = _scatter_pages(dst.k, dst.v, kp, vp, dst_pids)
+    d.length = n_tokens
+    src.free(sid)
+    moved = n_used * src.page_bytes
+    src.shipped_bytes_out += moved
+    dst.shipped_bytes_in += moved
+    return moved

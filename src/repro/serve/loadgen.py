@@ -15,7 +15,9 @@ a request "arrives" when the simulated clock passes its arrival time,
 and every token is stamped with the simulated time its dispatch
 completed. This folds real compute cost into queueing behaviour without
 needing a real-time client harness; timestamps are chunk-granular
-(a token's latency includes the dispatch it rode in on).
+(a token's latency includes the dispatch it rode in on). The
+disaggregated mode clocks its two lanes on separate timelines — see
+``run_continuous`` — because its pools live on disjoint device slices.
 
 **Drivers.**
 
@@ -84,14 +86,30 @@ def make_workload(cfg: LoadConfig) -> list:
                                sampling=cfg.sampling))
 
 
-def _metrics(workload, first_t, done_t, done_new, arrivals, makespan):
-    """Fold raw timestamps into the bench-row metric dict."""
+def _metrics(workload, first_t, done_t, done_new, arrivals, makespan, *,
+             start_t=None, wasted: int = 0, shipped: int = 0):
+    """Fold raw timestamps into the bench-row metric dict.
+
+    ``start_t`` stamps when each request's prefill began, splitting TTFT
+    into ``queue_wait`` (arrival -> prefill start) + ``prefill`` (start
+    -> first token) — the two components sum to TTFT exactly, per
+    request, so the percentiles are decomposable and the mean identity
+    ``mean_ttft == mean_queue_wait + mean_prefill`` holds to float
+    precision. ``wasted`` counts decode steps dispatched past request
+    budgets (discarded tokens); ``shipped`` counts KV bytes that crossed
+    pools (0 outside disaggregated mode).
+    """
+    start_t = start_t or {}
     offered = sum(r.max_new for r in workload)
     delivered = sum(done_new.values())
-    ttft = [first_t[i] - arrivals[i] for i in first_t]
+    rids = sorted(first_t)
+    ttft = [first_t[i] - arrivals[i] for i in rids]
+    q_wait = [start_t.get(i, arrivals[i]) - arrivals[i] for i in rids]
+    pre = [first_t[i] - start_t.get(i, arrivals[i]) for i in rids]
     per_tok = [(done_t[i] - first_t[i]) / max(done_new[i] - 1, 1)
                for i in done_t]
     pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+    mean = lambda xs: float(np.mean(xs)) if xs else 0.0
     makespan = max(makespan, 1e-9)
     return {
         "n_requests": len(workload),
@@ -101,19 +119,49 @@ def _metrics(workload, first_t, done_t, done_new, arrivals, makespan):
         "goodput_tok_s": delivered / makespan,
         "tok_s": delivered / makespan,
         "p50_ttft_s": pct(ttft, 50), "p99_ttft_s": pct(ttft, 99),
+        "p50_queue_wait_s": pct(q_wait, 50),
+        "p99_queue_wait_s": pct(q_wait, 99),
+        "p50_prefill_s": pct(pre, 50), "p99_prefill_s": pct(pre, 99),
+        "mean_ttft_s": mean(ttft),
+        "mean_queue_wait_s": mean(q_wait),
+        "mean_prefill_s": mean(pre),
         "p50_tok_latency_s": pct(per_tok, 50),
         "p99_tok_latency_s": pct(per_tok, 99),
+        "wasted_decode_tokens": int(wasted),
+        "shipped_bytes": int(shipped),
     }
 
 
 def run_continuous(engine: ServeEngine, workload: list, *,
                    warmup: bool = True, **sched_kw) -> dict:
-    """Drive a ``ContinuousScheduler`` through the workload."""
+    """Drive a ``ContinuousScheduler`` through the workload.
+
+    **Two-lane clock (disaggregated mode).** With ``disaggregate=True``
+    the prefill pool lives on its own mesh slice — prefill compute does
+    not occupy the decode devices — so the virtual clock splits into two
+    timelines: the decode lane paces simulated time (arrivals, decode
+    tokens, completions, page shipping), while the prefill lane is a
+    coprocessor with its own busy-until time. A step's prefill work
+    starts at ``max(prefill_lane_free, step_start)`` and first tokens
+    (prefill emits them) are stamped on the prefill timeline. This is
+    how disaggregation is benched on a single box: the lanes' measured
+    dispatch costs are real, only their overlap is simulated. The
+    interleaved modes keep the single shared clock — their prefill
+    genuinely steals decode-device time.
+    """
+    disagg = bool(sched_kw.get("disaggregate", False))
 
     def one_pass() -> dict:
         sch = ContinuousScheduler(engine, **sched_kw)
-        arrivals, first_t, done_t, done_new = {}, {}, {}, {}
-        now, i = 0.0, 0
+        # Pre-compile every (chunk length, row bucket) decode program the
+        # scheduler can dispatch. Without this, a combination first hit
+        # mid-run (the timed pass's virtual clock diverges from the warm
+        # pass's, so partial batches form differently) charges a full XLA
+        # compile to whichever requests are in flight — a seconds-long
+        # p99 TTFT outlier that is a harness artifact, not queueing.
+        sch.warm()
+        arrivals, start_t, first_t, done_t, done_new = {}, {}, {}, {}, {}
+        now, p_now, i, wasted = 0.0, 0.0, 0, 0
         while i < len(workload) or not sch.idle:
             while i < len(workload) and workload[i].arrival <= now:
                 r = workload[i]
@@ -123,14 +171,34 @@ def run_continuous(engine: ServeEngine, workload: list, *,
             if sch.idle and i < len(workload):
                 now = workload[i].arrival        # jump an idle gap
                 continue
+            before = now
             t0 = time.perf_counter()
             ev = sch.step()
-            now += time.perf_counter() - t0
+            wall = time.perf_counter() - t0
+            if disagg:
+                # prefill lane on its own timeline (its own devices)
+                p_start = max(p_now, before)
+                p_now = p_start + ev.prefill_lane_s
+                now = before + ev.decode_lane_s
+                for rid in ev.prefill_started:   # queue wait ends here
+                    start_t.setdefault(rid, p_start)
+                for rid in ev.prefilled:         # prefill emits token 0
+                    first_t.setdefault(rid, p_now)
+            else:
+                now = before + wall
+                for rid in ev.prefill_started:
+                    start_t.setdefault(rid, before)
+            wasted += ev.wasted_decode_tokens
             for rid in ev.tokens:
                 first_t.setdefault(rid, now)
             for c in ev.completed:
-                done_t[c.rid], done_new[c.rid] = now, c.n_new
-        return _metrics(workload, first_t, done_t, done_new, arrivals, now)
+                # a single-token request finishes on the prefill
+                # timeline, which may run ahead of the decode clock
+                done_t[c.rid] = max(now, first_t.get(c.rid, now))
+                done_new[c.rid] = c.n_new
+        return _metrics(workload, first_t, done_t, done_new, arrivals,
+                        max(now, p_now), start_t=start_t, wasted=wasted,
+                        shipped=sch.shipped_bytes)
 
     if warmup:
         one_pass()                               # compile pass
@@ -152,8 +220,8 @@ def run_fixed(engine: ServeEngine, workload: list, *, batch: int = 8,
     def one_pass() -> dict:
         pending = list(range(len(workload)))     # arrival-sorted indices
         arrivals = {i: workload[i].arrival for i in pending}
-        first_t, done_t, done_new = {}, {}, {}
-        now, n_in = 0.0, 0
+        start_t, first_t, done_t, done_new = {}, {}, {}, {}
+        now, n_in, wasted = 0.0, 0, 0
         backlog: list = []
         while backlog or n_in < len(workload):
             while n_in < len(workload) and workload[n_in].arrival <= now:
@@ -168,6 +236,7 @@ def run_fixed(engine: ServeEngine, workload: list, *, batch: int = 8,
             backlog = [i for i in backlog if i not in group]
             toks = np.stack([workload[i].prompt for i in group])
             n_new = next_pow2(max(workload[i].max_new for i in group))
+            wasted += sum(n_new - workload[i].max_new for i in group)
             samp = [workload[i].sampling for i in group]
             sampled = any(s.temperature > 0 for s in samp)
             t0 = time.perf_counter()
@@ -175,12 +244,14 @@ def run_fixed(engine: ServeEngine, workload: list, *, batch: int = 8,
                                   sampling=samp if sampled else None)
             dt = time.perf_counter() - t0
             for i in group:                      # first token ≈ prefill end
+                start_t[i] = now
                 first_t[i] = now + res.prefill_s
             now += dt
             for i in group:
                 done_t[i] = now
                 done_new[i] = workload[i].max_new
-        return _metrics(workload, first_t, done_t, done_new, arrivals, now)
+        return _metrics(workload, first_t, done_t, done_new, arrivals, now,
+                        start_t=start_t, wasted=wasted)
 
     if warmup:
         one_pass()
@@ -191,9 +262,16 @@ def bench_load_rows(api, params, mask_src, *, formats=("masked",),
                     rates=(8.0,), load: LoadConfig | None = None,
                     kernel: str = "auto", mesh=None,
                     masked_params=None, modes=("continuous", "fixed"),
+                    prefill_chunk: int | None = None,
                     **sched_kw) -> list:
     """The arrival-rate sweep: one ``phase == "load"`` row per
-    (variant, mode, rate), ready for BENCH_serve.json."""
+    (variant, mode, rate), ready for BENCH_serve.json.
+
+    ``mode == "disaggregated"`` reruns the continuous driver with
+    ``disaggregate=True`` (plus ``prefill_chunk`` when given — the
+    chunked-prefill window applies to that mode only, so the
+    "continuous" rows stay the single-pool interleaved baseline).
+    """
     load = load or LoadConfig()
     max_batch = sched_kw.get("max_batch", 8)
     rows = []
@@ -208,6 +286,11 @@ def bench_load_rows(api, params, mask_src, *, formats=("masked",),
             for mode in modes:
                 if mode == "continuous":
                     m = run_continuous(eng, wl, **sched_kw)
+                elif mode == "disaggregated":
+                    kw = dict(sched_kw, disaggregate=True)
+                    if prefill_chunk is not None:
+                        kw["prefill_chunk"] = prefill_chunk
+                    m = run_continuous(eng, wl, **kw)
                 else:
                     m = run_fixed(eng, wl, batch=max_batch)
                 rows.append({

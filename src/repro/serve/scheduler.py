@@ -1,46 +1,73 @@
-"""Continuous batching: per-step join/leave of the decode batch.
+"""Continuous batching: prefill lane + decode lane over paged sessions.
 
 The request-lifecycle layer of the serving stack, sitting between
 ``serve.engine`` (compiled step fns over packed weights) and
-``serve.kvcache`` (paged session storage):
+``serve.kvcache`` (paged session storage). Requests flow through two
+lanes:
 
-            submit() ──> queue ──(admission: free slot + pages)──┐
+  submit() ─> queue ──(admission window: pages + lane capacity)──┐
                                                                  v
-       prefill_session (B=1, prompt bucketed pow2, n_valid traced)
-                │ store prompt KV into pages
+   PREFILL LANE: one-shot prefill_session, or ⌈S/W⌉ fixed-shape
+   prefill_chunk windows advanced one per budget unit ── store KV
+                │                 (prefill pool when disaggregated)
                 v
-       join: gather pages ─> working-cache row b, t[b]=len, tok[b]
-                │
-                v                        ┌── leave (done): free pages
-       decode_chunk (n_steps per dispatch) ──┤   or sync row ─> pages
-                │                        └── swap-remove compaction
-                └── repeat
+   ready ──(slot free; disagg: ship_pages prefill→decode pool)──┐
+                                                                v
+   DECODE LANE: join row b ─> decode_chunk (clamped to max rem) ─┐
+                │                      ┌── leave (done): free / │
+                └──────── repeat ──────┤   sync row ─> pages     │
+                                       └── swap-remove compaction┘
 
 **Shape discipline** — nothing recompiles in steady state:
 
 * prompts right-pad to a pow2 bucket; ``n_valid`` is traced, so one
   prefill jit per bucket (≤ log2(capacity) programs);
+* chunked prefill replays the SAME window program for every chunk of
+  every prompt — one jit per (W, s_bucket) pair — and is bitwise
+  identical to one-shot prefill (see ``models.attention``: masked
+  scores are exact zeros, so attending over the full capacity every
+  chunk reproduces the one-shot reduction order);
 * the decode working cache is a FIXED (max_batch, capacity) dense
   cache; chunks run on its leading pow2 bucket of rows
   (``bucket_batch=False`` pins the full width — the bitwise-repro
-  test mode), giving ≤ log2(max_batch) chunk programs;
+  test mode), giving ≤ log2(max_batch) chunk programs. The chunk
+  LENGTH clamps to the pow2 bucket of the largest remaining budget
+  (≤ log2(decode_chunk) programs), so a tail of short requests stops
+  paying for whole chunks of discarded steps;
 * join/leave are jitted row scatters with a *traced* slot index, and
   sessions swap-remove so live rows stay compact at the front.
 
-**Sessions.** A request with ``keep=True`` leaves its pages allocated on
-completion; a later ``submit(None, n, session=sid)`` rejoins exactly
-where it left off (tokens replay bitwise at the same batch width: the
-PRNG key of position p is ``fold_in(seed, p)`` regardless of when — or
-next to whom — p is decoded; see ``serve.sampling``). ``release(sid)``
-frees a kept session.
+**Disaggregation.** With ``disaggregate=True`` prefill writes into its
+own ``PagedKVCache`` (optionally on its own mesh slice — see
+``dist.specs.mesh_slices``) and finished sessions ship page-granular
+to the decode pool (``kvcache.ship_pages``) before joining the batch.
+The queue admits ahead of free decode slots (up to ``max_batch`` extra
+in flight), so prefill work no longer waits for a decode row to drain —
+the head-of-line coupling that dominates TTFT at saturation. The
+default (``disaggregate=False``, ``prefill_chunk=None``) is today's
+single-pool interleaved mode and the bitwise-repro baseline.
 
-**Work accounting.** Each ``step()`` interleaves up to
-``prefill_budget`` admissions with one decode chunk, and returns the
-step's events (new tokens per request, completions) so a load generator
-can timestamp TTFT / per-token latency without reaching inside.
-Mid-chunk finishers overshoot (the chunk length is static); the surplus
-tokens are discarded — the waste is bounded by ``decode_chunk`` and is
-the price of a never-recompiling decode loop.
+**Admission.** ``_next_admissible`` scans a bounded window (first
+``admit_window`` waiting requests) and starts the FIRST one whose
+pages fit — FIFO order preserved among admissible requests, but one
+page-starved large request no longer blocks smaller ones behind it.
+
+**Sessions.** A request with ``keep=True`` leaves its pages allocated
+on completion (in the DECODE pool, in both modes); a later
+``submit(None, n, session=sid)`` rejoins exactly where it left off
+(tokens replay bitwise at the same batch width: the PRNG key of
+position p is ``fold_in(seed, p)`` regardless of when — or next to
+whom — p is decoded; see ``serve.sampling``). ``release(sid)`` frees a
+kept session.
+
+**Work accounting.** Each ``step()`` spends up to ``prefill_budget``
+units in the prefill lane (one chunk OR one admission each), joins
+ready sessions, then runs one decode chunk, and returns the step's
+events — first-token appearances, prefill starts (for queue-wait vs
+prefill-time TTFT decomposition), per-request tokens, completions, and
+the decode steps discarded past request budgets
+(``wasted_decode_tokens``) — so a load generator can timestamp
+TTFT / per-token latency without reaching inside.
 
 MoE caveat: expert-capacity competition couples batch rows, so batched
 MoE decode is not bitwise identical to solo decode (dense models are).
@@ -50,6 +77,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from functools import partial
 
 import jax
@@ -61,7 +89,7 @@ from repro.models.transformer import DecodeCache
 
 from . import sampling as sampling_lib
 from .engine import ServeEngine, next_pow2
-from .kvcache import PagedKVCache
+from .kvcache import PagedKVCache, ship_pages
 
 
 @dataclasses.dataclass
@@ -85,6 +113,13 @@ class StepEvents:
     completed: list               # Completion
     n_active: int
     n_queued: int
+    prefill_started: list = dataclasses.field(default_factory=list)
+    wasted_decode_tokens: int = 0  # decode steps discarded past budgets
+    # wall time spent in each lane this step — when the pools live on
+    # disjoint mesh slices the lanes run on disjoint devices, so a load
+    # generator may clock them on separate timelines
+    prefill_lane_s: float = 0.0
+    decode_lane_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -97,6 +132,30 @@ class _Slot:
     emitted: list
     keep: bool
     prompt_len: int
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """A prompt mid-way through the chunked-prefill lane."""
+
+    rid: int
+    sid: object
+    prompt: np.ndarray            # (1, s_bucket) right-padded
+    S: int
+    max_new: int
+    samp: sampling_lib.SamplingParams
+    keep: bool
+    cache: object                 # B=1 DecodeCache carried across chunks
+    offset: int = 0               # tokens already processed
+
+
+@dataclasses.dataclass
+class _Ready:
+    """A prefilled (or resumed) session waiting for a decode slot."""
+
+    slot: _Slot
+    tok: int                      # token feeding the first decode step
+    ship: bool                    # pages sit in the prefill pool
 
 
 @partial(jax.jit, donate_argnums=0)
@@ -138,24 +197,53 @@ class ContinuousScheduler:
         capacity: per-slot token capacity (prompt + output; power of
             two, multiple of ``page_size``).
         page_size: tokens per KV page.
-        n_pages: page-pool size; default backs every slot at full
-            capacity (kept sessions beyond that need headroom — pass
-            more).
-        prefill_budget: admissions attempted per step before the decode
-            chunk — the prefill/decode interleaving knob.
-        decode_chunk: decode steps per dispatch.
+        n_pages: decode-pool size in pages; default backs every slot at
+            full capacity (kept sessions beyond that need headroom —
+            pass more).
+        prefill_budget: prefill-lane units per step — each unit advances
+            one inflight chunked prefill by one window, or starts one
+            new admission (a full prompt in one-shot mode). Default 1
+            interleaved, 4 disaggregated: a lane on its own devices is
+            not paced by the decode chunk, and one unit per step starves
+            it whenever decode steps are short (chunked prompts need
+            ⌈S/W⌉ units each).
+        decode_chunk: decode steps per dispatch (upper bound; each
+            chunk clamps to the pow2 bucket of the largest remaining
+            request budget).
         bucket_batch: run chunks on the pow2 bucket of live rows (True,
             the throughput mode) or always at ``max_batch`` (False —
             fixed shapes, the bitwise-reproducibility mode).
         max_queue: admission control — ``submit`` beyond this many
             waiting requests raises.
+        admit_window: how many waiting requests the admission scan may
+            look past a page-starved head (FIFO among admissible).
+        prefill_chunk: window width W (power of two) for chunked
+            prefill — a prompt becomes ⌈S/W⌉ fixed-shape dispatches
+            interleaving with decode chunks, bitwise identical to the
+            one-shot path. ``None`` (default) prefills each prompt in
+            one dispatch.
+        disaggregate: prefill into a separate page pool and ship
+            sessions to the decode pool page-granular on join; admits
+            ahead of free decode slots. Default False — single pool,
+            today's interleaved mode.
+        prefill_mesh / decode_mesh: optional mesh (slices) placing the
+            two pools; ``decode_mesh`` defaults to the engine's mesh.
+            With distinct slices the engine's own mesh must be ``None``
+            or the decode slice (compiled fns cannot take inputs
+            committed to two device sets).
+        n_prefill_pages: prefill-pool size in pages (disaggregated
+            only); defaults to ``n_pages``.
     """
 
     def __init__(self, engine: ServeEngine, *, max_batch: int = 8,
                  capacity: int = 256, page_size: int = 16,
-                 n_pages: int | None = None, prefill_budget: int = 1,
+                 n_pages: int | None = None,
+                 prefill_budget: int | None = None,
                  decode_chunk: int = 8, bucket_batch: bool = True,
-                 max_queue: int = 1024):
+                 max_queue: int = 1024, admit_window: int = 4,
+                 prefill_chunk: int | None = None,
+                 disaggregate: bool = False, prefill_mesh=None,
+                 decode_mesh=None, n_prefill_pages: int | None = None):
         engine._require_continuous()
         if max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
@@ -166,25 +254,49 @@ class ContinuousScheduler:
         if capacity % page_size:
             raise ValueError(f"capacity {capacity} not divisible by "
                              f"page size {page_size}")
+        if prefill_chunk is not None and (
+                prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1)):
+            raise ValueError(f"prefill_chunk must be a power of two, "
+                             f"got {prefill_chunk}")
+        if prefill_chunk is not None and engine.api.prefill_window is None:
+            raise NotImplementedError(
+                f"{engine.cfg.family}: no chunked-prefill continuation")
         self.engine = engine
         self.cfg = engine.cfg
         self.max_batch = max_batch
         self.capacity = capacity
         self.page_size = page_size
-        self.prefill_budget = max(prefill_budget, 1)
+        self.prefill_budget = (4 if disaggregate else 1) \
+            if prefill_budget is None else max(prefill_budget, 1)
         self.decode_chunk = max(decode_chunk, 1)
         self.bucket_batch = bucket_batch
         self.max_queue = max_queue
+        self.admit_window = max(admit_window, 1)
+        self.prefill_chunk = prefill_chunk
+        self.disaggregate = disaggregate
         if n_pages is None:
             n_pages = max_batch * capacity // page_size
-        self.pool = PagedKVCache(self.cfg, n_pages=n_pages,
-                                 page_size=page_size, mesh=engine.mesh)
+        self.pool = PagedKVCache(
+            self.cfg, n_pages=n_pages, page_size=page_size,
+            mesh=engine.mesh if decode_mesh is None else decode_mesh)
+        self.prefill_pool = None
+        if disaggregate:
+            self.prefill_pool = PagedKVCache(
+                self.cfg,
+                n_pages=n_pages if n_prefill_pages is None
+                else n_prefill_pages,
+                page_size=page_size, mesh=prefill_mesh)
+        # async lanes may hold this many prefills beyond free decode slots
+        self._admit_ahead = (max_batch if (disaggregate or prefill_chunk)
+                             else 0)
         # fixed-shape working cache; the scalar clock becomes per-row
         cache = engine.api.init_cache(engine.params, max_batch, capacity)
         self.cache = cache._replace(t=jnp.zeros((max_batch,), jnp.int32))
         self._toks = jnp.zeros((max_batch,), jnp.int32)
         self.slots: list[_Slot] = []          # compact: rows [0, n_active)
         self.queue: collections.deque = collections.deque()
+        self._inflight: collections.deque = collections.deque()  # _Prefilling
+        self._ready: collections.deque = collections.deque()     # _Ready
         self._sessions: dict = {}             # sid -> next token (int)
         self._next_rid = 0
         self._samp = {
@@ -233,7 +345,38 @@ class ContinuousScheduler:
         del self._sessions[session]
         self.pool.free(session)
 
-    # -- lifecycle internals ------------------------------------------------
+    @property
+    def shipped_bytes(self) -> int:
+        """Bytes of KV pages shipped prefill pool -> decode pool."""
+        return self.pool.shipped_bytes_in
+
+    def warm(self) -> None:
+        """Pre-compile every decode-chunk program this scheduler can
+        dispatch — pow2 chunk lengths × pow2 row buckets, an enumerable
+        set — so a serving process pays compilation at startup instead
+        of mid-traffic (a first-hit compile inside a step shows up as a
+        seconds-long TTFT outlier for every request in flight). Runs on
+        the empty working cache (garbage rows are fully rewritten at
+        join), so it must be called before any session is active."""
+        if self.slots:
+            raise RuntimeError("warm() requires an empty decode batch")
+        samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
+        active = jnp.arange(self.max_batch) < 0
+        # mirror step()'s clamp formulas exactly, including the non-pow2
+        # decode_chunk / max_batch edge (the min() can land off-pow2)
+        steps = sorted({min(self.decode_chunk, next_pow2(n))
+                        for n in range(1, self.decode_chunk + 1)})
+        buckets = sorted({min(next_pow2(n), self.max_batch)
+                          for n in range(1, self.max_batch + 1)}) \
+            if self.bucket_batch else [self.max_batch]
+        for n in steps:
+            for b in buckets:
+                toks, self.cache = self.engine.decode_chunk(
+                    self._toks, self.cache, active, samp,
+                    n_steps=n, bucket=b)
+                self._toks = self._toks.at[:b].set(toks[-1])
+
+    # -- decode-batch internals ---------------------------------------------
 
     def _join(self, slot: _Slot, tok: int) -> None:
         b = len(self.slots)
@@ -269,79 +412,184 @@ class ContinuousScheduler:
                           prompt_len=slot.prompt_len,
                           n_new=len(slot.emitted), kept=slot.keep)
 
-    def _admit_one(self, events: StepEvents) -> bool:
-        """Try to prefill+join the queue head; False if it must wait."""
-        if not self.queue or len(self.slots) >= self.max_batch:
-            return False
-        rid, prompt, max_new, samp, session, keep = self.queue[0]
+    # -- prefill lane -------------------------------------------------------
+
+    def _next_admissible(self):
+        """Pop the first waiting request whose pages fit (bounded scan).
+
+        FIFO among admissible requests; a page-starved head is looked
+        past (up to ``admit_window`` deep), so small requests are not
+        head-of-line blocked by a large one waiting on capacity.
+        """
+        if (len(self.slots) + len(self._ready) + len(self._inflight)
+                >= self.max_batch + self._admit_ahead):
+            return None
+        for i in range(min(self.admit_window, len(self.queue))):
+            rid, prompt, max_new, samp, session, keep = self.queue[i]
+            if prompt is None:
+                ok = self.pool.can_extend(
+                    session, self.pool.length(session) + max_new)
+            elif self.disaggregate:
+                ok = self.prefill_pool.can_admit(len(prompt))
+            else:
+                ok = self.pool.can_admit(len(prompt) + max_new)
+            if ok:
+                entry = self.queue[i]
+                del self.queue[i]
+                return entry
+        return None
+
+    def _start(self, entry, events: StepEvents) -> None:
+        """Spend one prefill-lane unit starting ``entry``."""
+        rid, prompt, max_new, samp, session, keep = entry
         if prompt is None:                       # resume a kept session
             kv_len = self.pool.length(session)
-            try:
-                self.pool.extend(session, kv_len + max_new)
-            except MemoryError:
-                return False                     # wait for pages
-            self.queue.popleft()
-            tok = self._sessions[session]
+            self.pool.extend(session, kv_len + max_new)
             slot = _Slot(rid=rid, sid=session, samp=samp, rem=max_new,
                          t_true=kv_len, emitted=[], keep=keep,
                          prompt_len=kv_len)
-            self._join(slot, tok)
-            return True
+            self._ready.append(_Ready(slot, self._sessions[session], False))
+            return
         S = len(prompt)
         sid = session if session is not None else ("r", rid)
-        if not self.pool.can_admit(S + max_new):
-            return False                         # wait for pages
-        self.queue.popleft()
-        self.pool.alloc(sid, S + max_new)
+        if self.disaggregate:
+            self.prefill_pool.alloc(sid, S)
+        else:
+            self.pool.alloc(sid, S + max_new)
         s_bucket = min(max(self.page_size, next_pow2(S)), self.capacity)
         padded = np.zeros((1, s_bucket), np.int32)
         padded[0, :S] = prompt
-        tok0, k, v = self.engine.prefill_session(
-            jnp.asarray(padded), S, sampling_lib.params_arrays([samp]))
-        self.pool.store(sid, k, v, S)
-        tok0 = int(tok0[0])
-        slot = _Slot(rid=rid, sid=sid, samp=samp, rem=max_new - 1,
-                     t_true=S, emitted=[tok0], keep=keep, prompt_len=S)
+        events.prefill_started.append(rid)
+        if self.prefill_chunk is None:           # one-shot prefill
+            tok0, k, v = self.engine.prefill_session(
+                jnp.asarray(padded), S, sampling_lib.params_arrays([samp]))
+            (self.prefill_pool if self.disaggregate
+             else self.pool).store(sid, k, v, S)
+            self._finish_prefill(rid, sid, S, max_new, samp, keep,
+                                 int(tok0[0]), events)
+            return
+        pf = _Prefilling(
+            rid=rid, sid=sid, prompt=padded, S=S, max_new=max_new,
+            samp=samp, keep=keep,
+            cache=self.engine.api.init_cache(self.engine.params, 1,
+                                             s_bucket))
+        self._inflight.append(pf)
+        self._advance(pf, events)                # first window, same unit
+
+    def _advance(self, pf: _Prefilling, events: StepEvents) -> None:
+        """Run one fixed-shape prefill window of an inflight prompt."""
+        w = min(self.prefill_chunk, pf.prompt.shape[1])
+        window = jnp.asarray(pf.prompt[:, pf.offset:pf.offset + w])
+        tok, pf.cache = self.engine.prefill_chunk(
+            window, pf.offset, pf.S, pf.cache,
+            sampling_lib.params_arrays([pf.samp]))
+        pf.offset += w
+        if pf.offset < pf.S:
+            return                               # more windows to go
+        self._inflight.remove(pf)
+        (self.prefill_pool if self.disaggregate else self.pool).store(
+            pf.sid, pf.cache.kv.k[:, 0], pf.cache.kv.v[:, 0], pf.S)
+        pf.cache = None                          # drop the B=1 carrier
+        self._finish_prefill(pf.rid, pf.sid, pf.S, pf.max_new, pf.samp,
+                             pf.keep, int(tok[0]), events)
+
+    def _finish_prefill(self, rid, sid, S, max_new, samp, keep, tok0,
+                        events: StepEvents) -> None:
         events.prefilled.append(rid)
         events.tokens.setdefault(rid, []).append(tok0)
-        if slot.rem == 0:
-            # single-token request: never joins the decode batch — its
-            # pages already hold exactly the prompt KV, so there is no
-            # working row to sync back (and nothing to free but pages)
-            if keep:
-                self._sessions[sid] = tok0
-            else:
-                self.pool.free(sid)
-            events.completed.append(Completion(
-                rid=rid, session=sid, tokens=np.asarray([tok0], np.int32),
-                prompt_len=S, n_new=1, kept=keep))
-        else:
-            self._join(slot, tok0)
+        slot = _Slot(rid=rid, sid=sid, samp=samp, rem=max_new - 1,
+                     t_true=S, emitted=[tok0], keep=keep, prompt_len=S)
+        self._ready.append(_Ready(slot, tok0, self.disaggregate))
+
+    def _prefill_one(self, events: StepEvents) -> bool:
+        """One prefill-lane unit: advance the oldest inflight window,
+        else start a new admission. False when the lane has no work."""
+        if self._inflight:
+            self._advance(self._inflight[0], events)
+            return True
+        entry = self._next_admissible()
+        if entry is None:
+            return False
+        self._start(entry, events)
         return True
+
+    # -- ready -> decode-batch handoff --------------------------------------
+
+    def _join_ready(self, events: StepEvents) -> None:
+        """Join prefilled sessions to the decode batch, FIFO, shipping
+        pages out of the prefill pool first when disaggregated. Stops at
+        the first session that must wait (no slot / no decode pages)."""
+        while self._ready:
+            r = self._ready[0]
+            slot = r.slot
+            if slot.rem == 0:
+                # single-token request: never joins the decode batch —
+                # its pages hold exactly the prompt KV, so there is no
+                # working row to sync back
+                if slot.keep:
+                    if r.ship:
+                        if not self.pool.can_admit(slot.t_true):
+                            break                # wait for decode pages
+                        ship_pages(self.prefill_pool, self.pool, slot.sid,
+                                   capacity=self.capacity)
+                    self._sessions[slot.sid] = r.tok
+                else:
+                    (self.prefill_pool if r.ship
+                     else self.pool).free(slot.sid)
+                events.completed.append(Completion(
+                    rid=slot.rid, session=slot.sid,
+                    tokens=np.asarray(slot.emitted, np.int32),
+                    prompt_len=slot.prompt_len, n_new=1, kept=slot.keep))
+                self._ready.popleft()
+                continue
+            if len(self.slots) >= self.max_batch:
+                break                            # wait for a decode slot
+            if r.ship:
+                need = slot.t_true + slot.rem + 1    # prompt + output
+                if not self.pool.can_admit(need):
+                    break                        # wait for decode pages
+                ship_pages(self.prefill_pool, self.pool, slot.sid,
+                           capacity=self.capacity)
+                self.pool.extend(slot.sid, need)
+            self._ready.popleft()
+            self._join(slot, r.tok)
 
     # -- the step loop ------------------------------------------------------
 
     def step(self) -> StepEvents:
-        """One scheduler step: up to ``prefill_budget`` admissions, then
-        one decode chunk over the live rows."""
+        """One scheduler step: up to ``prefill_budget`` prefill-lane
+        units, ready-session joins, then one decode chunk."""
         events = StepEvents(prefilled=[], tokens={}, completed=[],
                             n_active=0, n_queued=0)
+        t0 = time.perf_counter()
         for _ in range(self.prefill_budget):
-            if not self._admit_one(events):
+            if not self._prefill_one(events):
                 break
+        t1 = time.perf_counter()
+        events.prefill_lane_s = t1 - t0
+        # shipping scatters into the decode pool, so it bills decode
+        self._join_ready(events)
         n_active = len(self.slots)
         if n_active:
+            # clamp to the pow2 bucket of the largest remaining budget —
+            # exact clamping would compile up to decode_chunk distinct
+            # chunk programs; the bucket keeps it to log2 like the batch
+            # dimension, while a tail of short requests stops paying for
+            # whole chunks of discarded steps
+            n_steps = min(self.decode_chunk,
+                          next_pow2(max(s.rem for s in self.slots)))
             bucket = min(next_pow2(n_active), self.max_batch) \
                 if self.bucket_batch else self.max_batch
             active = jnp.arange(self.max_batch) < n_active
             samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
             toks, self.cache = self.engine.decode_chunk(
                 self._toks, self.cache, active, samp,
-                n_steps=self.decode_chunk, bucket=bucket)
+                n_steps=n_steps, bucket=bucket)
             self._toks = self._toks.at[:bucket].set(toks[-1])
             host = np.asarray(toks)              # (n_steps, bucket)
             for b, slot in enumerate(self.slots):
-                m = min(self.decode_chunk, slot.rem)
+                m = min(n_steps, slot.rem)
+                events.wasted_decode_tokens += n_steps - m
                 new = host[:m, b].tolist()
                 slot.emitted.extend(new)
                 slot.rem -= m
@@ -353,12 +601,15 @@ class ContinuousScheduler:
                 if self.slots[b].rem == 0:
                     events.completed.append(self._leave(b))
         events.n_active = len(self.slots)
-        events.n_queued = len(self.queue)
+        events.n_queued = (len(self.queue) + len(self._inflight)
+                           + len(self._ready))
+        events.decode_lane_s = time.perf_counter() - t1
         return events
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.slots
+        return not (self.queue or self.slots or self._inflight
+                    or self._ready)
 
     def run_until_idle(self, max_steps: int = 100_000) -> dict:
         """Drain queue + batch; returns {rid: Completion}."""

@@ -1,0 +1,444 @@
+"""Disaggregated serving: chunked prefill, page shipping, two-lane scheduler.
+
+The acceptance surface of the prefill/decode disaggregation layer:
+
+* chunked prefill is BITWISE identical to one-shot prefill — final
+  logits-derived token, stored KV, and full sampled streams agree for
+  every window width (the masked-score argument in
+  ``models.attention``: empty cache slots contribute exact zeros, so
+  attending over the full capacity every window reproduces the
+  one-shot reduction);
+* disaggregated mode (separate prefill pool, page-granular shipping)
+  serves the exact token streams of the single-pool interleaved
+  baseline on dense models;
+* ``ship_pages`` round-trips KV bitwise with byte accounting on both
+  ends and rolls back cleanly on an exhausted destination;
+* the admission window lets small requests overtake a page-starved
+  head without otherwise reordering FIFO; decode chunks clamp to the
+  largest remaining budget and report the discarded steps;
+* pool lifecycle under churn — defrag with live sessions, admission
+  right after release, used_bytes back to zero — holds in both modes;
+* the load-generator rows carry the queue-wait/prefill TTFT breakdown
+  with its sum identity, and the bench gate enforces it.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.serve import (GREEDY, ContinuousScheduler, PagedKVCache,
+                         SamplingParams, ServeEngine)
+from repro.serve import loadgen, sampling
+from repro.serve.kvcache import ship_pages
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = configs.get_tiny("llama31-8b")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    return cfg, api, params, ServeEngine(api, params, fmt="dense")
+
+
+def _prompt(n, seed=0, vocab=256):
+    return np.random.default_rng(seed).integers(
+        0, vocab, size=n).astype(np.int32)
+
+
+def _sched(engine, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ContinuousScheduler(engine, **kw)
+
+
+# -- chunked prefill: the bitwise contract ------------------------------------
+
+
+def test_prefill_chunk_bitwise_equals_one_shot(tiny):
+    """Windowed prefill continuation == one-shot prefill, bitwise: the
+    stored KV of every VALID position, and the first sampled token,
+    agree for every window width (including widths that don't divide
+    the prompt). Slots past the prompt are garbage by the contiguity
+    contract in both paths, so only [0, S) is compared."""
+    _, api, params, engine = tiny
+    S, s_bucket = 13, 16
+    prompt = _prompt(S, seed=11)
+    padded = np.zeros((1, s_bucket), np.int32)
+    padded[0, :S] = prompt
+    samp = sampling.params_arrays(
+        [SamplingParams(temperature=0.9, top_p=0.9, seed=7)])
+    tok_ref, k_ref, v_ref = engine.prefill_session(
+        jnp.asarray(padded), S, samp)
+    for W in (2, 4, 8, 16):
+        cache = api.init_cache(params, 1, s_bucket)
+        off = 0
+        while off < S:
+            tok, cache = engine.prefill_chunk(
+                jnp.asarray(padded[:, off:off + W]), off, S, cache, samp)
+            off += W
+        np.testing.assert_array_equal(np.asarray(cache.kv.k[:, 0])[:, :S],
+                                      np.asarray(k_ref)[:, :S],
+                                      err_msg=f"K differs at W={W}")
+        np.testing.assert_array_equal(np.asarray(cache.kv.v[:, 0])[:, :S],
+                                      np.asarray(v_ref)[:, :S],
+                                      err_msg=f"V differs at W={W}")
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_ref),
+                                      err_msg=f"token differs at W={W}")
+        assert int(np.asarray(cache.t).reshape(-1)[0]) == S
+
+
+def test_chunked_scheduler_streams_bitwise_across_widths(tiny):
+    """Full scheduler runs (mixed greedy + seeded sampling) produce
+    identical token streams for every prefill_chunk width, in both
+    single-pool and disaggregated mode — chunking and shipping are pure
+    scheduling choices, invisible in the tokens."""
+    _, _, _, engine = tiny
+    reqs = [
+        (_prompt(13, seed=1), 6, GREEDY),
+        (_prompt(5, seed=2), 3, SamplingParams(temperature=0.8, seed=4)),
+        (_prompt(29, seed=3), 7, SamplingParams(temperature=1.1, top_p=0.9,
+                                                top_k=32, seed=5)),
+        (_prompt(8, seed=4), 1, GREEDY),     # completes at prefill
+    ]
+
+    def run(**kw):
+        sch = _sched(engine, bucket_batch=False, **kw)
+        rids = [sch.submit(p, n, sampling=s) for p, n, s in reqs]
+        done = sch.run_until_idle()
+        assert sch.pool.used_bytes == 0
+        if sch.prefill_pool is not None:
+            assert sch.prefill_pool.used_bytes == 0
+        return [done[r].tokens.tolist() for r in rids]
+
+    want = run()
+    for kw in (dict(prefill_chunk=4), dict(prefill_chunk=16),
+               dict(disaggregate=True),
+               dict(disaggregate=True, prefill_chunk=8)):
+        assert run(**kw) == want, f"stream differs for {kw}"
+
+
+def test_disaggregated_ships_real_bytes(tiny):
+    _, _, _, engine = tiny
+    sch = _sched(engine, disaggregate=True, prefill_chunk=4)
+    rid = sch.submit(_prompt(12, seed=9), 5)
+    done = sch.run_until_idle()
+    assert done[rid].n_new == 5
+    # 12 prompt tokens = 2 pages of 8 crossed the pools exactly once
+    assert sch.shipped_bytes == 2 * sch.pool.page_bytes
+    assert sch.prefill_pool.shipped_bytes_out == sch.shipped_bytes
+    assert sch.prefill_pool.used_bytes == 0 and sch.pool.used_bytes == 0
+
+
+def test_prefill_chunk_rejects_bad_widths(tiny):
+    _, _, _, engine = tiny
+    with pytest.raises(ValueError, match="power of two"):
+        _sched(engine, prefill_chunk=6)
+
+
+# -- ship_pages ---------------------------------------------------------------
+
+
+def test_ship_pages_roundtrip_and_accounting(tiny):
+    cfg = tiny[0]
+    src = PagedKVCache(cfg, n_pages=8, page_size=4)
+    dst = PagedKVCache(cfg, n_pages=8, page_size=4)
+    L, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(3)
+    k = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+    v = rng.normal(size=(L, 16, kvh, dh)).astype(np.float32)
+    src.alloc("s", 11)                       # 3 pages
+    src.store("s", jnp.asarray(k), jnp.asarray(v), 11)
+    moved = ship_pages(src, dst, "s", capacity=16)
+    assert moved == 3 * src.page_bytes
+    assert src.shipped_bytes_out == dst.shipped_bytes_in == moved
+    assert "s" not in src.sessions() and src.used_bytes == 0
+    got_k, got_v, pos, length = dst.load("s", 16)
+    assert length == 11
+    np.testing.assert_array_equal(np.asarray(got_k)[:, :11], k[:, :11])
+    np.testing.assert_array_equal(np.asarray(got_v)[:, :11], v[:, :11])
+    np.testing.assert_array_equal(
+        np.asarray(pos), np.where(np.arange(16) < 11, np.arange(16), -1))
+
+
+def test_ship_pages_dst_full_rolls_back(tiny):
+    cfg = tiny[0]
+    src = PagedKVCache(cfg, n_pages=4, page_size=4)
+    dst = PagedKVCache(cfg, n_pages=4, page_size=4)
+    dst.alloc("hog", 12)                     # 3 of 4 pages taken
+    src.alloc("s", 9)                        # needs 3 pages at dst
+    L, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    src.store("s", jnp.zeros((L, 16, kvh, dh)), jnp.zeros((L, 16, kvh, dh)),
+              9)
+    with pytest.raises(MemoryError, match="exhausted"):
+        ship_pages(src, dst, "s", capacity=16)
+    # source intact and still shippable; destination unchanged
+    assert "s" in src.sessions() and src.length("s") == 9
+    assert dst.sessions() == ["hog"]
+    assert src.shipped_bytes_out == 0 and dst.shipped_bytes_in == 0
+    dst.free("hog")
+    assert ship_pages(src, dst, "s", capacity=16) == 3 * src.page_bytes
+
+
+def test_ship_pages_page_size_mismatch(tiny):
+    cfg = tiny[0]
+    src = PagedKVCache(cfg, n_pages=4, page_size=4)
+    dst = PagedKVCache(cfg, n_pages=4, page_size=8)
+    src.alloc("s", 4)
+    with pytest.raises(ValueError, match="page-size mismatch"):
+        ship_pages(src, dst, "s", capacity=16)
+
+
+# -- admission window (head-of-line blocking) ---------------------------------
+
+
+def test_small_request_overtakes_page_starved_head(tiny):
+    """A large request waiting on pages no longer blocks admissible
+    small ones behind it — the admission scan looks past the head."""
+    _, _, _, engine = tiny
+    sch = _sched(engine, n_pages=8, prefill_budget=1, decode_chunk=1)
+    a = sch.submit(_prompt(8, seed=0), 24)   # 32 tokens = 4 pages
+    sch.step()                               # A active, 4 pages free
+    big = sch.submit(_prompt(24, seed=1), 16)   # 40 tokens = 5 pages: starved
+    small = sch.submit(_prompt(8, seed=2), 4)   # 16 tokens = 2 pages: fits
+    ev = sch.step()
+    assert small in ev.prefill_started and big not in ev.prefill_started
+    assert sch.queue and sch.queue[0][0] == big  # head keeps its place
+    done = sch.run_until_idle()              # A drains -> big admitted
+    assert set(done) >= {a, big, small}
+    assert done[big].n_new == 16
+    assert sch.pool.used_bytes == 0
+
+
+def test_admission_stays_fifo_when_unstarved(tiny):
+    """With ample pages the scan admits strictly in submit order."""
+    _, _, _, engine = tiny
+    sch = _sched(engine, prefill_budget=1, decode_chunk=1)
+    rids = [sch.submit(_prompt(6, seed=s), 2) for s in range(4)]
+    order = []
+    while not sch.idle:
+        order.extend(sch.step().prefill_started)
+    assert order == rids
+
+
+def test_starved_beyond_window_waits(tiny):
+    """Only the first ``admit_window`` waiting requests are scanned —
+    an admissible request deeper than the window does not jump it."""
+    _, _, _, engine = tiny
+    sch = _sched(engine, n_pages=8, admit_window=2,
+                 prefill_budget=1, decode_chunk=1)
+    sch.submit(_prompt(8, seed=0), 24)       # 4 pages
+    sch.step()
+    starved = [sch.submit(_prompt(24, seed=s), 16) for s in (1, 2)]
+    small = sch.submit(_prompt(8, seed=3), 4)   # admissible, but 3rd in line
+    ev = sch.step()
+    assert not ev.prefill_started            # window saw only starved heads
+    assert sch.run_until_idle()              # everything still completes
+
+
+# -- decode-chunk clamping ----------------------------------------------------
+
+
+def test_decode_chunk_clamps_to_remaining_budget(tiny):
+    """The chunk length shrinks to the pow2 bucket of the largest
+    remaining request budget; discarded steps are reported per step."""
+    _, _, _, engine = tiny
+    sch = _sched(engine, decode_chunk=8, prefill_budget=2,
+                 bucket_batch=False)
+    sch.submit(_prompt(8, seed=0), 2)        # rem 1 after prefill
+    sch.submit(_prompt(8, seed=1), 4)        # rem 3 after prefill
+    ev = sch.step()
+    # max rem 3 buckets to a 4-step chunk (not 8): waste 3 + 1
+    assert ev.wasted_decode_tokens == 4
+    assert sorted(c.n_new for c in ev.completed) == [2, 4]
+    assert ("chunk", 4, sch.max_batch) in engine.compiled_fn_keys()
+    assert ("chunk", 8, sch.max_batch) not in engine.compiled_fn_keys()
+    assert sch.idle and sch.pool.used_bytes == 0
+
+
+def test_solo_short_request_wastes_nothing(tiny):
+    _, _, _, engine = tiny
+    sch = _sched(engine, decode_chunk=8)
+    sch.submit(_prompt(8, seed=0), 5)        # rem 4: one exact 4-chunk
+    wasted = 0
+    while not sch.idle:
+        wasted += sch.step().wasted_decode_tokens
+    assert wasted == 0
+
+
+# -- pool lifecycle under churn -----------------------------------------------
+
+
+@pytest.mark.parametrize("mode_kw", [{}, {"disaggregate": True,
+                                          "prefill_chunk": 4}])
+def test_pool_churn_defrag_release_leak(tiny, mode_kw):
+    """Defrag with live kept sessions, admission immediately after
+    release, and a zero-leak drain — in single-pool and disaggregated
+    mode."""
+    _, _, _, engine = tiny
+    samp = SamplingParams(temperature=0.7, seed=9)
+    sch = _sched(engine, bucket_batch=False, **mode_kw)
+    prompt = _prompt(10, seed=7)
+    r1 = sch.submit(prompt, 4, sampling=samp, session="s0", keep=True)
+    first = sch.run_until_idle()[r1]
+    assert first.kept and sch.pool.used_bytes > 0
+    # churn the pool: fill and free neighbours, then compact around the
+    # live kept session
+    fill = [sch.submit(_prompt(6, seed=20 + i), 3) for i in range(3)]
+    assert set(sch.run_until_idle()) == set(fill)
+    sch.pool.defrag()
+    if sch.prefill_pool is not None:
+        sch.prefill_pool.defrag()
+    # the kept session still resumes bitwise after defrag + churn
+    r2 = sch.submit(None, 6, sampling=samp, session="s0")
+    second = sch.run_until_idle()[r2]
+    solo = _sched(engine, bucket_batch=False)
+    ref = solo.submit(prompt, 10, sampling=samp)
+    want = solo.run_until_idle()[ref].tokens
+    np.testing.assert_array_equal(
+        np.concatenate([first.tokens, second.tokens]), want)
+    # resume with keep=False freed it; admission right after release-like
+    # drain must succeed at full pool width
+    assert sch.pool.used_bytes == 0
+    r3 = sch.submit(_prompt(8, seed=30), 2, session="s1", keep=True)
+    sch.run_until_idle()
+    sch.release("s1")
+    r4 = sch.submit(_prompt(8, seed=31), 2)  # admission right after release
+    assert sch.run_until_idle()[r4].n_new == 2
+    assert sch.pool.used_bytes == 0
+    if sch.prefill_pool is not None:
+        assert sch.prefill_pool.used_bytes == 0
+        assert sch.shipped_bytes > 0
+
+
+# -- load rows: TTFT breakdown ------------------------------------------------
+
+
+def _check_mod():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_serve_bench",
+        Path(__file__).resolve().parents[1] / "benchmarks"
+        / "check_serve_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_load_rows_ttft_breakdown_and_disagg_mode(tiny):
+    _, api, params, _ = tiny
+    load = loadgen.LoadConfig(duration_s=0.25, prompt_len=(4, 8),
+                              output_len=(2, 6))
+    rows = loadgen.bench_load_rows(
+        api, params, None, formats=("dense",), rates=(32.0,), load=load,
+        modes=("continuous", "fixed", "disaggregated"), prefill_chunk=4,
+        max_batch=4, capacity=32, page_size=8, decode_chunk=2)
+    assert {r["mode"] for r in rows} == {"continuous", "fixed",
+                                         "disaggregated"}
+    for r in rows:
+        assert 0 <= r["p50_queue_wait_s"] <= r["p99_queue_wait_s"]
+        assert 0 <= r["p50_prefill_s"] <= r["p99_prefill_s"]
+        # the breakdown sums to TTFT exactly (per request, so in mean)
+        assert r["mean_queue_wait_s"] + r["mean_prefill_s"] == \
+            pytest.approx(r["mean_ttft_s"], abs=1e-9)
+        assert r["wasted_decode_tokens"] >= 0
+        if r["mode"] == "disaggregated":
+            assert r["shipped_bytes"] > 0
+        else:
+            assert r["shipped_bytes"] == 0
+    mod = _check_mod()
+    doc = {"arch": "tiny", "batch": 4, "prompt_len": 8, "gen": 4,
+           "devices": 1, "rows": rows}
+    assert mod.check(doc, max_nm24_prefill_ratio=50.0) == []
+    # the gate catches a broken breakdown sum
+    bad = dict(rows[0])
+    bad["mean_queue_wait_s"] = bad["mean_ttft_s"] + 1.0
+    errs = mod.check({**doc, "rows": [bad]}, max_nm24_prefill_ratio=50.0)
+    assert any("breakdown does not sum" in e for e in errs)
+    # --require-disagg-wins needs a continuous baseline at the same rate
+    only_disagg = [r for r in rows if r["mode"] == "disaggregated"]
+    errs = mod.check({**doc, "rows": only_disagg},
+                     max_nm24_prefill_ratio=50.0, require_disagg_wins=True)
+    assert any("baseline" in e for e in errs)
+
+
+# -- mesh slices: disaggregated pools on disjoint devices ---------------------
+
+
+def test_mesh_slices_validation():
+    from repro.dist import specs as specs_lib
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    with pytest.raises(ValueError, match="no axis"):
+        specs_lib.mesh_slices(mesh, axis="pod")
+    with pytest.raises(ValueError, match="size 1"):
+        specs_lib.mesh_slices(mesh, axis="data")
+
+
+@pytest.mark.slow
+def test_mesh_sliced_disagg_matches_interleaved():
+    """8 forced host devices: the host mesh carves into a prefill slice
+    and a decode slice (dist.specs.mesh_slices), the two pools live on
+    their own slices, pages ship across, and the disaggregated token
+    streams equal the single-pool interleaved baseline."""
+    code = """
+        import numpy as np, jax
+        import repro.configs as configs, repro.models as models
+        from repro.dist import specs as specs_lib
+        from repro.launch import mesh as mesh_lib
+        from repro.serve import ContinuousScheduler, ServeEngine
+
+        assert len(jax.devices()) == 8
+        mesh = mesh_lib.make_host_mesh(data=4, model=2)
+        pre_mesh, dec_mesh = specs_lib.mesh_slices(mesh, axis="data")
+        assert not (set(pre_mesh.devices.flat) & set(dec_mesh.devices.flat))
+        cfg = configs.get_tiny("llama31-8b")
+        api = models.build(cfg)
+        params = api.init(jax.random.key(0))
+        # the engine computes on the DECODE slice; the prefill pool lives
+        # on the other slice and sessions ship across on join
+        eng = ServeEngine(api, params, fmt="dense", mesh=dec_mesh)
+        rng = np.random.default_rng(0)
+        reqs = [(rng.integers(0, cfg.vocab_size, size=s).astype(np.int32), n)
+                for s, n in ((13, 5), (8, 3), (21, 6), (5, 2))]
+
+        def run(**kw):
+            sch = ContinuousScheduler(eng, max_batch=4, capacity=32,
+                                      page_size=8, decode_chunk=4,
+                                      bucket_batch=False, **kw)
+            rids = [sch.submit(p, n) for p, n in reqs]
+            done = sch.run_until_idle()
+            return sch, [done[r].tokens.tolist() for r in rids]
+
+        base_sch, want = run()
+        sch, got = run(disaggregate=True, prefill_chunk=8,
+                       prefill_mesh=pre_mesh, decode_mesh=dec_mesh)
+        assert got == want, "disagg tokens differ from interleaved"
+        assert set(sch.prefill_pool.k.sharding.device_set) == \\
+            set(pre_mesh.devices.flat)
+        assert set(sch.pool.k.sharding.device_set) == \\
+            set(dec_mesh.devices.flat)
+        assert sch.shipped_bytes > 0
+        assert sch.pool.used_bytes == 0
+        assert sch.prefill_pool.used_bytes == 0
+        print("DISAGG-MESH OK", sch.shipped_bytes)
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "DISAGG-MESH OK" in out.stdout
