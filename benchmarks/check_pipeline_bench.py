@@ -1,0 +1,125 @@
+"""Schema + quality guard for BENCH_pipeline.json (CI).
+
+    python benchmarks/check_pipeline_bench.py [path] \
+        [--require-recovery-win] [--max-recovered-ratio 1.0]
+
+Validates the ``quality_*`` rows the prune→recover pipeline emits
+(``benchmarks/pipeline_batched.py --recover-only``): all three variants
+present exactly once, perplexities finite and positive, the recovered
+row carrying its full recovery metadata (selection, steps, trainable
+fraction, start/end CE), and end CE ≤ start CE — recovery trained, it
+did not diverge. By default recovered perplexity must not exceed pruned
+(``--max-recovered-ratio`` bounds recovered/pruned, default 1.0);
+``--require-recovery-win`` tightens that to a STRICT win — the
+acceptance bar for the committed artifact, off for CI smoke runs where
+few-step recovery can land within noise of the bound.
+
+Perf rows (``refine_*``, ``calib_*``, ...) are out of scope here — they
+carry bench-machine wall-clock and are schema-checked only loosely (a
+``variant`` key each); this checker gates the quality axis.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+QUALITY_VARIANTS = ("quality_dense", "quality_pruned", "quality_recovered")
+RECOVERED_KEYS = {"pattern", "method", "recover_select", "recover_steps",
+                  "recover_lr", "trainable_frac", "ce_start", "ce_end"}
+
+
+def check(doc: dict, *, max_recovered_ratio: float = 1.0,
+          require_recovery_win: bool = False) -> list[str]:
+    errs: list[str] = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        errs.append("doc missing 'rows' list")
+        return errs
+    by: dict[str, dict] = {}
+    for i, r in enumerate(rows):
+        if "variant" not in r:
+            errs.append(f"row {i} missing 'variant'")
+            continue
+        v = r["variant"]
+        if not v.startswith("quality_"):
+            continue
+        if v not in QUALITY_VARIANTS:
+            errs.append(f"row {i}: unknown quality variant {v!r}")
+            continue
+        if v in by:
+            errs.append(f"duplicate row for {v!r}")
+            continue
+        by[v] = r
+        ppl = r.get("perplexity")
+        if not isinstance(ppl, (int, float)) or not math.isfinite(ppl) \
+                or ppl <= 0:
+            errs.append(f"{v}: perplexity must be finite and > 0, "
+                        f"got {ppl!r}")
+    missing = [v for v in QUALITY_VARIANTS if v not in by]
+    if missing:
+        errs.append(f"missing quality rows {missing}")
+        return errs
+    rec = by["quality_recovered"]
+    absent = RECOVERED_KEYS - rec.keys()
+    if absent:
+        errs.append(f"quality_recovered missing {sorted(absent)}")
+    if not 0 < rec.get("trainable_frac", 0) <= 1:
+        errs.append(f"quality_recovered: trainable_frac "
+                    f"{rec.get('trainable_frac')!r} not in (0, 1]")
+    ce0, ce1 = rec.get("ce_start"), rec.get("ce_end")
+    if isinstance(ce0, (int, float)) and isinstance(ce1, (int, float)):
+        if ce1 > ce0:
+            errs.append(f"recovery diverged: ce_end {ce1:.4f} > "
+                        f"ce_start {ce0:.4f}")
+    # no dense-vs-pruned ordering check: the bench model is random-init,
+    # where sparsegpt's reconstruction update can land either side of
+    # dense — only the recovery claim (recovered vs pruned) is gated
+    pruned = by["quality_pruned"]["perplexity"]
+    recovered = rec["perplexity"]
+    if recovered > pruned * max_recovered_ratio * (1 + 1e-9):
+        errs.append(
+            f"recovered perplexity {recovered:.4f} exceeds "
+            f"{max_recovered_ratio:.3f}x pruned ({pruned:.4f})")
+    if require_recovery_win and recovered >= pruned:
+        errs.append(
+            f"--require-recovery-win: recovered {recovered:.4f} does not "
+            f"strictly beat pruned {pruned:.4f}")
+    return errs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?",
+                    default=str(ROOT / "BENCH_pipeline.json"))
+    ap.add_argument("--max-recovered-ratio", type=float, default=1.0,
+                    help="bound on recovered/pruned perplexity "
+                         "(default 1.0: recovered must not be worse)")
+    ap.add_argument("--require-recovery-win", action="store_true",
+                    help="fail unless recovered perplexity strictly beats "
+                         "pruned (the committed-artifact acceptance bar)")
+    args = ap.parse_args(argv)
+    doc = json.loads(Path(args.path).read_text())
+    errs = check(doc, max_recovered_ratio=args.max_recovered_ratio,
+                 require_recovery_win=args.require_recovery_win)
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    by = {r["variant"]: r for r in doc["rows"]
+          if r.get("variant", "").startswith("quality_")}
+    print("ok: {} — ppl dense {:.2f} / pruned {:.2f} / recovered {:.2f}{}"
+          .format(args.path,
+                  by["quality_dense"]["perplexity"],
+                  by["quality_pruned"]["perplexity"],
+                  by["quality_recovered"]["perplexity"],
+                  " (strict win)" if args.require_recovery_win else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -190,6 +190,72 @@ def bench_refine_kswap(api, cfg, *, sparsity=0.6, t_max=400, repeats=2,
     return rows
 
 
+def bench_recovery(api, cfg, *, pattern="2:4", method="sparsegpt",
+                   t_max=3, steps=60, lr=5e-3, select="norms_biases",
+                   n_val=4, verbose=True):
+    """Quality rows: token-weighted perplexity dense → pruned → recovered.
+
+    Prunes the bench model (sparsegpt so recovery stacks on refined
+    weights), runs the PERP recovery pass (``pruning.recover``) on the
+    calibration stream, and reports the three perplexities the committed
+    artifact gates on: ``quality_recovered`` must beat
+    ``quality_pruned`` (``check_pipeline_bench.py --require-recovery-win``).
+    """
+    import importlib
+
+    from repro.pruning.recover import RecoverSpec, recover
+    from repro.train import steps as steps_lib
+
+    ev = importlib.import_module("repro.pruning.evaluate")
+    params = api.init(jax.random.key(0))
+    calib = list(pruning.calibration_batches(cfg, n_samples=8, seq_len=64,
+                                             batch_size=4))
+    pat = masks_lib.parse_pattern(pattern)
+    rep = pruning.prune_model(api, params, calib, pat, method=method,
+                              t_max=t_max)
+    pruned_params = (rep.updated_params if rep.updated_params is not None
+                     else params)
+    val = ev.val_batches(cfg, n_batches=n_val)
+
+    ppl_dense = steps_lib.perplexity(api, params, val)
+    ppl_pruned = steps_lib.perplexity(api, pruned_params, val,
+                                      masks=rep.masks)
+    spec = RecoverSpec(select=select, steps=steps, lr=lr,
+                       batch_size=4, seq_len=64)
+    t0 = time.time()
+    res = recover(api, pruned_params, rep.masks, spec)
+    wall = time.time() - t0
+    ppl_rec = steps_lib.perplexity(api, res.params, val, masks=rep.masks)
+
+    # windowed means: every step draws a fresh calibration batch, so raw
+    # first/last CE would carry batch noise into the checker's
+    # did-not-diverge gate
+    k = max(1, min(5, len(res.ce_history)))
+    ce_start = sum(res.ce_history[:k]) / k if res.ce_history else None
+    ce_end = sum(res.ce_history[-k:]) / k if res.ce_history else None
+
+    rows = [
+        {"variant": "quality_dense", "perplexity": ppl_dense,
+         "n_val_batches": n_val},
+        {"variant": "quality_pruned", "perplexity": ppl_pruned,
+         "pattern": pattern, "method": method, "n_val_batches": n_val},
+        {"variant": "quality_recovered", "perplexity": ppl_rec,
+         "pattern": pattern, "method": method, "n_val_batches": n_val,
+         "wall_s": wall, "recover_select": select,
+         "recover_steps": steps, "recover_lr": lr,
+         "trainable_frac": res.trainable_frac,
+         "ce_start": ce_start, "ce_end": ce_end},
+    ]
+    if verbose:
+        print(f"  {'quality_dense':18s} ppl {ppl_dense:8.2f}")
+        print(f"  {'quality_pruned':18s} ppl {ppl_pruned:8.2f}  "
+              f"[{pattern} {method}]")
+        print(f"  {'quality_recovered':18s} ppl {ppl_rec:8.2f}  "
+              f"[{select}, {steps} steps, "
+              f"{100*res.trainable_frac:.2f}% params, {wall:.1f}s]")
+    return rows
+
+
 def _merge_rows(out_path: Path, new_rows: list, header: dict) -> dict:
     """Merge rows into an existing BENCH json (replace same-name variants)."""
     if out_path.exists():
@@ -284,6 +350,10 @@ def run(arch: str = "llama31-8b", *, t_max: int = 20, sparsity: float = 0.6,
     rows.extend(bench_refine_kswap(api, cfg, sparsity=sparsity,
                                    repeats=repeats, verbose=verbose))
 
+    if verbose:
+        print("quality (perplexity, prune -> recover):")
+    rows.extend(bench_recovery(api, cfg, verbose=verbose))
+
     out = {"arch": arch, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
            "t_max": t_max, "sparsity": sparsity,
            "devices": len(jax.devices()), "rows": rows}
@@ -315,16 +385,50 @@ def run_kswap_only(arch: str = "llama31-8b", *, sparsity: float = 0.6,
     return data
 
 
+def run_recovery_only(arch: str = "llama31-8b", *, steps: int = 60,
+                      out: Path | None = None,
+                      verbose: bool = True) -> dict:
+    """Only the quality_* rows, merged into the bench json (or ``out``).
+
+    The CI recovery bench smoke runs this against a scratch file and
+    gates it with ``check_pipeline_bench.py``; the committed
+    BENCH_pipeline.json gets the same rows from a local full run.
+    """
+    cfg = _bench_cfg(arch)
+    api = models.build(cfg)
+    rows = bench_recovery(api, cfg, steps=steps, verbose=verbose)
+    header = {"arch": arch, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+              "devices": len(jax.devices())}
+    path = out if out is not None else OUT
+    data = _merge_rows(path, rows, header)
+    if verbose:
+        print(f"  merged {len(rows)} rows into {path}")
+    return data
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--kswap-only", action="store_true",
                     help="only the refine_kswap rows (merge into the json)")
+    ap.add_argument("--recover-only", action="store_true",
+                    help="only the quality_* prune->recover rows "
+                         "(merge into the json)")
+    ap.add_argument("--recover-steps", type=int, default=60,
+                    help="recovery steps for the quality rows")
+    ap.add_argument("--out", default=None,
+                    help="merge target for --kswap-only/--recover-only "
+                         "(default: the repo-root BENCH_pipeline.json)")
     ap.add_argument("--t-max", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None)
     args = ap.parse_args()
-    if args.kswap_only:
+    if args.recover_only:
+        run_recovery_only(steps=args.recover_steps,
+                          out=Path(args.out) if args.out else None)
+    elif args.kswap_only:
+        if args.out:
+            OUT = Path(args.out)
         run_kswap_only(t_max=args.t_max or 400, repeats=args.repeats or 2)
     else:
         kw = {}

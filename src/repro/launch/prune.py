@@ -19,6 +19,13 @@ moments. Accumulation checkpoints every ``--calib-ckpt-every`` batches
 under ``<out>/prune_ckpt/calib``, and with ``--out-dir`` every completed
 site group's masks land under ``<out>/prune_ckpt`` — an interrupted run
 resumes at the calibration batch / site group it died on (DESIGN §6).
+
+``--recover norms_biases [--recover-steps N --recover-lr LR]`` appends
+PERP post-prune recovery (``pruning.recover``): masked-gradient AdamW on
+the selected ~1% of params over the calibration stream, resumable under
+``<out>/prune_ckpt/recover``, with the recovered changed leaves dumped
+to ``<out>/weights`` so ``launch/serve.py --masks-from <out>`` serves
+the recovered model.
 """
 from __future__ import annotations
 
@@ -58,15 +65,33 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
           out_dir: str | None = None, seed: int = 0,
           calib_ckpt_every: int = 0, mesh: str | None = None,
           recipe: str | None = None, plan_only: bool = False,
-          calib_stats: str = "full", verbose: bool = True) -> dict:
+          calib_stats: str = "full", recover: str | None = None,
+          recover_steps: int = 50, recover_lr: float = 1e-3,
+          verbose: bool = True) -> dict:
     """``mesh``: None (single device), "host" (all local devices), or
     "production" — sparseswaps refinement then runs row-sharded via
     repro.dist (groups whose method has no distributed refiner are marked
-    "single-device" in the plan)."""
+    "single-device" in the plan).
+
+    ``recover``: a PERP selection name ("norms", "biases", "norms_biases",
+    "all_masked", "lora") runs post-prune recovery for ``recover_steps``
+    steps at ``recover_lr`` on the calibration stream; it overrides a
+    recipe-attached ``recover`` spec. Recovered weights are evaluated,
+    checkpointed under ``<out>/prune_ckpt/recover``, and their changed
+    leaves dumped to ``<out>/weights`` — ``launch/serve.py --masks-from
+    <out>`` then serves the recovered model directly."""
+    import dataclasses as _dc
+
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
     rec = _build_recipe(pattern, recipe=recipe, warmstart=warmstart,
                         method=method, t_max=t_max, k_swaps=k_swaps)
+    if recover is not None:
+        # CLI wins over a recipe-attached spec; calibration geometry and
+        # seed follow the pruning run's own calibration stream
+        rec = _dc.replace(rec, recover=pruning.RecoverSpec(
+            select=recover, steps=recover_steps, lr=recover_lr,
+            batch_size=calib_batch, seq_len=calib_seq, seed=seed))
     mesh_obj = None
     if mesh:
         from repro.launch import mesh as mesh_lib
@@ -122,12 +147,31 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
         print(f"pruned: ppl {sparse_eval['perplexity']:.2f}  "
               f"acc {100*sparse_eval['accuracy']:.2f}%")
 
+    recovered_eval = rec_res = None
+    if plan.recover is not None:
+        rec_res = executor.recover(checkpoint_every=calib_ckpt_every,
+                                   verbose=verbose)
+        recovered_eval = pruning.evaluate(
+            api, report.updated_params, masks=report.masks, seed=seed)
+        if verbose:
+            print(f"recovered ({plan.recover.select}, "
+                  f"{rec_res.steps_run + rec_res.start_step} steps, "
+                  f"{100*rec_res.trainable_frac:.2f}% of params): "
+                  f"ppl {recovered_eval['perplexity']:.2f}  "
+                  f"acc {100*recovered_eval['accuracy']:.2f}%")
+
     if out_dir:
         out = Path(out_dir)
         out.mkdir(parents=True, exist_ok=True)
         ckpt.save(out / "masks", 0, report.masks)
+        if report.updated_params is not None:
+            from repro.pruning.executor import changed_leaves
+            upd = changed_leaves(params, report.updated_params)
+            if upd:
+                # serve --masks-from <out> splices these over a fresh init
+                ckpt.save(out / "weights", 0, upd)
         (out / "recipe.json").write_text(rec.to_json())
-        (out / "report.json").write_text(json.dumps({
+        doc = {
             "arch": arch, "method": report.method,
             "warmstart": report.warmstart, "pattern": report.pattern,
             "mean_error_reduction": report.mean_error_reduction(),
@@ -137,8 +181,26 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
                        "method": s.method,
                        "err_red": [float(x) for x in s.error_reduction]}
                       for s in report.sites],
-        }, indent=1))
-    return {"report": report, "dense": dense_eval, "pruned": sparse_eval}
+        }
+        if recovered_eval is not None:
+            doc["recovered"] = recovered_eval
+            doc["recovery"] = {
+                "spec": plan.recover.to_json_dict(),
+                "trainable_count": rec_res.trainable_count,
+                "trainable_frac": rec_res.trainable_frac,
+                "steps_run": rec_res.steps_run,
+                "start_step": rec_res.start_step,
+                "ce_start": rec_res.ce_history[0] if rec_res.ce_history
+                else None,
+                "ce_end": rec_res.ce_history[-1] if rec_res.ce_history
+                else None,
+            }
+        (out / "report.json").write_text(json.dumps(doc, indent=1))
+    out_d = {"report": report, "dense": dense_eval, "pruned": sparse_eval}
+    if recovered_eval is not None:
+        out_d["recovered"] = recovered_eval
+        out_d["recover_result"] = rec_res
+    return out_d
 
 
 def main(argv=None):
@@ -173,6 +235,15 @@ def main(argv=None):
     ap.add_argument("--calib-ckpt-every", type=int, default=0,
                     help="checkpoint the calibration accumulator every k "
                          "batches (under <out>/prune_ckpt/calib)")
+    ap.add_argument("--recover", default=None,
+                    choices=["norms", "biases", "norms_biases",
+                             "all_masked", "lora"],
+                    help="run PERP post-prune recovery on this param "
+                         "selection (overrides a recipe-attached spec)")
+    ap.add_argument("--recover-steps", type=int, default=50,
+                    help="recovery AdamW steps over the calibration stream")
+    ap.add_argument("--recover-lr", type=float, default=1e-3,
+                    help="recovery peak learning rate (warmup-cosine)")
     args = ap.parse_args(argv)
     prune(args.arch, tiny=args.tiny, pattern=args.sparsity,
           warmstart=args.warmstart, method=args.method, t_max=args.t_max,
@@ -181,7 +252,9 @@ def main(argv=None):
           out_dir=args.out_dir, seed=args.seed, mesh=args.mesh,
           recipe=args.recipe, plan_only=args.plan_only,
           calib_stats=args.calib_stats,
-          calib_ckpt_every=args.calib_ckpt_every)
+          calib_ckpt_every=args.calib_ckpt_every,
+          recover=args.recover, recover_steps=args.recover_steps,
+          recover_lr=args.recover_lr)
 
 
 if __name__ == "__main__":

@@ -57,7 +57,19 @@ def global_norm(tree) -> jnp.ndarray:
 
 def update(cfg: AdamWConfig, grads, state: AdamWState, params,
            masks=None) -> tuple[Any, AdamWState, dict]:
-    """Returns (new_params, new_state, metrics)."""
+    """Returns (new_params, new_state, metrics).
+
+    With ``masks`` the mask invariant holds through the WHOLE update, not
+    just at the end: gradients are masked before the norm/clip and the
+    moment update (``grad_norm`` measures only trainable coordinates and
+    ``m``/``v`` stay exactly zero at pruned ones), weight decay decays the
+    masked weight, and the returned params are re-masked — so pruned
+    entries come out bitwise zero even when the caller's forward pass
+    did not mask.
+    """
+    if masks is not None:
+        grads = apply_masks(grads, masks)
+        params = apply_masks(params, masks)
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
     step = state.step + 1

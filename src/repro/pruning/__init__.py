@@ -12,6 +12,7 @@ from .executor import (PruneCallback, PruneExecutor, PrintProgress)
 from .pipeline import PruneReport, SiteReport, apply, prune_model
 from .plan import PlannedGroup, PrunePlan, plan_pruning
 from .recipe import PruneRecipe, ResolvedRule, SiteRule
+from .recover import RecoverResult, RecoverSpec, recover
 from .sites import (GramBatch, GramStats, SiteGroup, SiteSpec, TapSpec,
                     build_mask_tree, enumerate_sites, prunable_param_count,
                     site_specs, tap_specs)
@@ -21,11 +22,12 @@ __all__ = [
     "CalibSpec", "CalibStats", "GramBatch", "GramStats", "GroupResult",
     "PlannedGroup", "PrintProgress",
     "PruneCallback", "PruneExecutor", "PrunePlan", "PruneRecipe",
-    "PruneReport", "RefineContext", "ResolvedRule", "SiteGroup", "SiteReport",
+    "PruneReport", "RecoverResult", "RecoverSpec", "RefineContext",
+    "ResolvedRule", "SiteGroup", "SiteReport",
     "SiteRule", "SiteSpec", "TapSpec", "accumulate", "accumulate_stats",
     "apply", "build_mask_tree",
     "calibration_batches", "enumerate_sites", "evaluate", "make_tap_step",
     "perplexity", "plan_pruning", "prunable_param_count", "prune_model",
-    "refine_group", "refine_group_reference", "register", "site_specs",
-    "tap_specs", "top1_accuracy", "val_batches",
+    "recover", "refine_group", "refine_group_reference", "register",
+    "site_specs", "tap_specs", "top1_accuracy", "val_batches",
 ]

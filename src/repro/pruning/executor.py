@@ -398,6 +398,39 @@ class PruneExecutor:
         self.callback.on_run_done(report)
         return report
 
+    # -- post-prune recovery ------------------------------------------------
+
+    def recover(self, spec=None, *, checkpoint_every: int = 0,
+                batches=None, verbose: bool = False):
+        """Run the PERP recovery pass on the last ``run()``'s masks.
+
+        ``spec`` defaults to the plan's attached ``RecoverSpec`` (recipe
+        ``recover=``), else ``RecoverSpec()``. Recovery trains on top of
+        the report's ``updated_params`` when the refiner produced them
+        (sparsegpt), checkpoints under ``<ckpt_dir>/recover``, and
+        installs the recovered tree back into the report — the very next
+        ``export_packed()`` ships it, so ``ServeEngine``/``--masks-from``
+        serve the recovered model with zero new serving code.
+        """
+        # note: ``from . import recover`` would resolve to the re-exported
+        # function on the package, not this submodule
+        from .recover import RecoverSpec
+        from .recover import recover as _recover
+
+        report = self._last_report
+        if report is None:
+            raise ValueError("nothing to recover — call run() first")
+        if spec is None:
+            spec = self.plan.recover or RecoverSpec()
+        base = (report.updated_params
+                if report.updated_params is not None else self.params)
+        res = _recover(
+            self.api, base, report.masks, spec, mesh=self.plan.mesh,
+            ckpt_dir=self.ckpt_dir, checkpoint_every=checkpoint_every,
+            batches=batches, verbose=verbose)
+        report.updated_params = res.params
+        return res
+
     # -- serving export -----------------------------------------------------
 
     def export_packed(self, out_dir: str | Path, fmt: str = "nm24",
@@ -439,9 +472,27 @@ class PruneExecutor:
         # the other format) works from the same artifact
         ckpt.save(out / "masks", 0, report.masks)
         if report.updated_params is not None:
-            # sparsegpt updates the surviving weights — the mask-based
-            # serving paths need them too, not just the packed dump
-            upd = {name: sites_lib._get(params, name.split("."))
-                   for name in meta}
-            ckpt.save(out / "weights", 0, upd)
+            # dump every leaf that differs from the executor's base
+            # params: sparsegpt's updated site weights AND recovered
+            # norms/biases/adapter merges all ride the same splice path
+            # (core.packed._splice_weights keys on dotted names)
+            upd = changed_leaves(self.params, params)
+            if upd:
+                ckpt.save(out / "weights", 0, upd)
         return out
+
+
+def changed_leaves(base: dict, new: dict) -> dict:
+    """Flat {dotted name: leaf} of every leaf in ``new`` that differs
+    from ``base`` — the minimal weight dump the serving splice path
+    (``core.packed._splice_weights``) restores over a fresh init."""
+    out = {}
+    base_flat = jax.tree_util.tree_flatten_with_path(base)[0]
+    new_flat = jax.tree_util.tree_flatten_with_path(new)[0]
+    for (bpath, bleaf), (_, nleaf) in zip(base_flat, new_flat):
+        if nleaf is bleaf:
+            continue
+        if np.array_equal(np.asarray(nleaf), np.asarray(bleaf)):
+            continue
+        out[".".join(str(p.key) for p in bpath)] = nleaf
+    return out

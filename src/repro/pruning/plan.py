@@ -90,6 +90,11 @@ class PrunePlan:
     def active_groups(self) -> tuple[PlannedGroup, ...]:
         return tuple(g for g in self.groups if not g.skip)
 
+    @property
+    def recover(self):
+        """The recipe's attached RecoverSpec (None = no recovery pass)."""
+        return getattr(self.recipe, "recover", None)
+
     def total_weight_bytes(self) -> int:
         return sum(g.weight_bytes for g in self.groups)
 
@@ -213,7 +218,20 @@ class PrunePlan:
         if self.cfg is not None:
             lines.append("")
             lines.extend(self._describe_calibration())
+        if self.recover is not None:
+            lines.append("")
+            lines.extend(self._describe_recovery())
         return "\n".join(lines)
+
+    def _describe_recovery(self) -> list[str]:
+        """The post-prune recovery block: what retrains, for how long."""
+        rec = self.recover
+        warm = max(1, int(rec.warmup_frac * rec.steps))
+        return [
+            f"recovery (PERP): {rec.describe()}",
+            f"  schedule: {warm}-step warmup -> cosine to "
+            f"{rec.min_lr_frac:g}x lr | wd {rec.weight_decay:g} | "
+            f"ckpt key {rec.fingerprint()} (under <ckpt_dir>/recover)"]
 
     def _describe_calibration(self) -> list[str]:
         """The calibration cost block: per-tap level + accumulator bytes.

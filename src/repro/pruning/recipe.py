@@ -31,6 +31,7 @@ import json
 from repro.core import masks as masks_lib
 
 from repro.core.warmstart import CRITERIA as _WARMSTARTS
+from .recover import RecoverSpec
 
 
 def _coerce_int(v, name: str = "t_max") -> int:
@@ -119,7 +120,14 @@ class ResolvedRule:
 
 @dataclasses.dataclass(frozen=True)
 class PruneRecipe:
-    """Ordered per-site rules over recipe-level defaults."""
+    """Ordered per-site rules over recipe-level defaults.
+
+    ``recover`` (optional) attaches a post-prune recovery pass — a
+    :class:`~repro.pruning.recover.RecoverSpec` retraining the PERP
+    selection under the refined masks. It rides the recipe's JSON
+    round-trip (top-level ``"recover"`` key) so a recipe file fully
+    specifies the prune→recover run.
+    """
 
     rules: tuple[SiteRule, ...] = ()
     pattern: masks_lib.Pattern | None = None
@@ -128,6 +136,7 @@ class PruneRecipe:
     t_max: int = 100
     eps: float = 0.0
     k_swaps: int | None = None    # swaps per search pass; None = auto
+    recover: RecoverSpec | None = None
 
     def __post_init__(self):
         # tolerate list inputs; keep the dataclass hashable/comparable
@@ -138,11 +147,12 @@ class PruneRecipe:
     def single(cls, pattern: masks_lib.Pattern | str, *,
                method: str = "sparseswaps", warmstart: str = "wanda",
                t_max: int = 100, eps: float = 0.0,
-               k_swaps: int | None = None) -> "PruneRecipe":
+               k_swaps: int | None = None,
+               recover: RecoverSpec | None = None) -> "PruneRecipe":
         """The monolithic ``prune_model`` call as a zero-rule recipe."""
         return cls(rules=(), pattern=masks_lib.parse_pattern(pattern),
                    method=method, warmstart=warmstart, t_max=t_max, eps=eps,
-                   k_swaps=k_swaps)
+                   k_swaps=k_swaps, recover=recover)
 
     # -- resolution ---------------------------------------------------------
 
@@ -237,15 +247,16 @@ class PruneRecipe:
             defaults["k_swaps"] = self.k_swaps
         if self.pattern is not None:
             defaults["pattern"] = masks_lib.format_pattern(self.pattern)
-        return json.dumps(
-            {"defaults": defaults,
-             "rules": [r.to_json_dict() for r in self.rules]},
-            indent=indent)
+        doc = {"defaults": defaults,
+               "rules": [r.to_json_dict() for r in self.rules]}
+        if self.recover is not None:
+            doc["recover"] = self.recover.to_json_dict()
+        return json.dumps(doc, indent=indent)
 
     @classmethod
     def from_json(cls, text: str) -> "PruneRecipe":
         data = json.loads(text)
-        unknown = set(data) - {"defaults", "rules"}
+        unknown = set(data) - {"defaults", "rules", "recover"}
         if unknown:
             raise ValueError(f"unknown recipe keys {sorted(unknown)}")
         defaults = dict(data.get("defaults", {}))
@@ -264,4 +275,6 @@ class PruneRecipe:
                                               "k_swaps")
         rules = tuple(SiteRule.from_json_dict(r)
                       for r in data.get("rules", []))
-        return cls(rules=rules, **defaults)
+        recover = (RecoverSpec.from_json_dict(data["recover"])
+                   if data.get("recover") is not None else None)
+        return cls(rules=rules, recover=recover, **defaults)

@@ -1,0 +1,422 @@
+"""Post-prune recovery (PERP): retrain ~1% of the params under the masks.
+
+Full retraining after one-shot pruning is exactly what the paper calls
+prohibitive at scale; PERP (Zimmer et al., 2024) shows that retraining a
+tiny, carefully-chosen parameter subset — norm scales, biases, optionally
+low-rank (LoRA) adapters on the pruned projections — recovers most of the
+pruning-induced degradation at a fraction of the cost. This module is
+that step for an executed :class:`~repro.pruning.plan.PrunePlan`:
+
+* ``RecoverSpec`` — the declarative knobs: which params train
+  (``select``), for how many steps, under what AdamW schedule, on which
+  calibration stream. JSON round-trips (recipes embed it) and
+  fingerprints (sha256) for checkpoint keying.
+* ``recover(api, params, masks, spec)`` — freezes everything outside the
+  selection, then runs masked-gradient AdamW over the same calibration
+  ``DataPipeline`` the stats accumulator consumes (identical seed/split
+  protocol as ``calibrate.calibration_batches``). The step is one jitted
+  donated-carry ``(base, state, batch) -> (state, metrics)``; with
+  ``mesh=`` the train state takes ``dist.specs.state_pspecs`` shardings
+  and batches shard over the data axes. ``ckpt_dir`` enables atomic
+  checkpoint/resume under ``<ckpt_dir>/recover`` keyed by the spec
+  fingerprint — a rerun with different knobs recomputes, never restores.
+* The result's ``params`` is a full spliced tree: hand it to
+  ``PruneReport.updated_params`` (``PruneExecutor.recover`` does) and the
+  existing sparsegpt new-weights path serves it — ``export_packed``
+  dumps the changed leaves, ``ServeEngine`` / ``launch.serve
+  --masks-from`` splice them back. Zero new serving code.
+
+The mask invariant is enforced at every point a pruned coordinate could
+leak: trainable site weights are masked at init, gradients/moments/decay
+are masked inside ``adamw.update``, LoRA deltas are masked at merge.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import ckpt
+from repro.models import ModelApi
+from repro.optim import adamw
+from repro.train import steps as steps_lib
+
+SELECTIONS = ("norms", "biases", "norms_biases", "all_masked", "lora")
+
+# leaf names that identify norm / bias params across the model families
+# (transformer ln1/ln2/ln_f {scale, bias}, mamba2 norm_scale / dt_bias)
+_NORM_KEYS = ("scale", "norm_scale")
+_BIAS_KEYS = ("bias", "dt_bias")
+
+_SPEC_KEYS = ("select", "steps", "lr", "weight_decay", "clip_norm",
+              "warmup_frac", "min_lr_frac", "b1", "b2", "batch_size",
+              "seq_len", "seed", "lora_rank")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoverSpec:
+    """What to retrain after pruning, and how.
+
+    ``select``:
+        * "norms"        — norm scales only;
+        * "biases"       — bias vectors only;
+        * "norms_biases" — both (the PERP default, ~0.1-1% of params);
+        * "all_masked"   — the pruned projections themselves, gradients
+          masked so pruned coords stay exactly zero (sparse finetune);
+        * "lora"         — rank-``lora_rank`` adapters per pruned site;
+          the merged ``(W + B@A) * mask`` is what gets spliced/served.
+
+    ``batch_size``/``seq_len``/``seed`` pin the calibration stream —
+    matching the accumulator's ``calibration_batches`` arguments replays
+    the exact batches calibration consumed.
+    """
+
+    select: str = "norms_biases"
+    steps: int = 50
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_frac: float = 0.1
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    batch_size: int = 4
+    seq_len: int = 128
+    seed: int = 0
+    lora_rank: int = 4
+
+    def __post_init__(self):
+        if self.select not in SELECTIONS:
+            raise ValueError(f"unknown select {self.select!r}; "
+                             f"have {SELECTIONS}")
+        if self.steps < 0:
+            raise ValueError(f"steps must be >= 0, got {self.steps}")
+        if self.lora_rank < 1:
+            raise ValueError(f"lora_rank must be >= 1, got {self.lora_rank}")
+
+    def opt_config(self) -> adamw.AdamWConfig:
+        return adamw.AdamWConfig(
+            lr=self.lr, b1=self.b1, b2=self.b2,
+            weight_decay=self.weight_decay, clip_norm=self.clip_norm,
+            warmup_steps=max(1, int(self.warmup_frac * self.steps)),
+            total_steps=max(self.steps, 1),
+            min_lr_frac=self.min_lr_frac)
+
+    # -- serialization / keying --------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        return {k: getattr(self, k) for k in _SPEC_KEYS}
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "RecoverSpec":
+        unknown = set(d) - set(_SPEC_KEYS)
+        if unknown:
+            raise ValueError(f"unknown RecoverSpec keys {sorted(unknown)}")
+        kw = dict(d)
+        for k in ("steps", "batch_size", "seq_len", "seed", "lora_rank"):
+            if k in kw:
+                kw[k] = int(kw[k])
+        return cls(**kw)
+
+    def fingerprint(self) -> str:
+        """Content hash keying the ``<ckpt_dir>/recover`` checkpoints —
+        same convention as ``CalibSpec.fingerprint`` (a resumed job never
+        mixes state from a different recovery configuration)."""
+        return hashlib.sha256(json.dumps(
+            self.to_json_dict(), sort_keys=True).encode()).hexdigest()[:16]
+
+    def describe(self) -> str:
+        return (f"select={self.select} steps={self.steps} lr={self.lr:.1e} "
+                f"wd={self.weight_decay:g} clip={self.clip_norm:g} "
+                f"batch={self.batch_size}x{self.seq_len} seed={self.seed}"
+                + (f" rank={self.lora_rank}" if self.select == "lora"
+                   else ""))
+
+
+@dataclasses.dataclass
+class RecoverResult:
+    """Recovered params + the run's accounting."""
+
+    params: dict                  # full tree, splice-ready (updated_params)
+    spec: RecoverSpec
+    trainable: dict               # the trained leaves (flat dotted names)
+    trainable_count: int
+    total_count: int
+    steps_run: int                # steps executed THIS call (post-resume)
+    start_step: int               # where resume picked up (0 = fresh)
+    ce_history: list              # per-step mean CE, this call only
+
+    @property
+    def trainable_frac(self) -> float:
+        return self.trainable_count / max(self.total_count, 1)
+
+
+# ---------------------------------------------------------------------------
+# param selection
+# ---------------------------------------------------------------------------
+
+def _flat_leaves(tree) -> list:
+    """[(dotted name, leaf)] — dict-path keys joined with "." (the same
+    naming ``export_packed``'s weight dump and ``_splice_weights`` use)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path), leaf)
+            for path, leaf in flat]
+
+
+def _set(tree, path, leaf):
+    node = tree
+    for k in path[:-1]:
+        node = node[k]
+    node[path[-1]] = leaf
+
+
+def _get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _splice(base, flat: dict):
+    """Copy of ``base`` with each dotted-name leaf replaced."""
+    out = jax.tree.map(lambda x: x, base)
+    for name, leaf in flat.items():
+        path = tuple(name.split("."))
+        _set(out, path, leaf.astype(_get(base, path).dtype))
+    return out
+
+
+@dataclasses.dataclass
+class _Selection:
+    trainable: dict               # flat {dotted name: leaf} to train
+    merge: object                 # (base, trainable) -> full params
+    opt_masks: dict | None        # masks for adamw.update (same keys)
+
+
+def _norm_bias_selection(params, select: str) -> _Selection:
+    keys = {"norms": _NORM_KEYS, "biases": _BIAS_KEYS,
+            "norms_biases": _NORM_KEYS + _BIAS_KEYS}[select]
+    # copy: the trainable state is donated every step, and donating the
+    # caller's own param buffers would delete them out from under the
+    # frozen base tree
+    trainable = {name: jnp.array(leaf) for name, leaf in _flat_leaves(params)
+                 if name.rsplit(".", 1)[-1] in keys}
+    return _Selection(trainable=trainable, merge=_splice, opt_masks=None)
+
+
+def _mask_sites(masks) -> dict:
+    """Flat {dotted param name: mask leaf} of every masked site."""
+    return {name: m for name, m in _flat_leaves(masks)}
+
+
+def _all_masked_selection(params, masks) -> _Selection:
+    sites = _mask_sites(masks)
+    # mask at init: the invariant then holds from step 0, and the fixed
+    # adamw.update(masks=) keeps it (grads/moments/decay all masked)
+    trainable = {name: _get(params, tuple(name.split("."))) * m.astype(
+        _get(params, tuple(name.split("."))).dtype)
+        for name, m in sites.items()}
+    return _Selection(trainable=trainable, merge=_splice, opt_masks=sites)
+
+
+def _lora_selection(params, masks, spec: RecoverSpec) -> _Selection:
+    sites = _mask_sites(masks)
+    key = jax.random.key(spec.seed)
+    trainable = {}
+    for i, (name, _) in enumerate(sorted(sites.items())):
+        w = _get(params, tuple(name.split(".")))
+        *stack, d_out, d_in = w.shape
+        r = min(spec.lora_rank, d_out, d_in)
+        ka = jax.random.fold_in(key, i)
+        # B zero-initialized: the adapter starts as the identity delta
+        trainable[name] = {
+            "a": 0.01 * jax.random.normal(ka, (*stack, r, d_in),
+                                          jnp.float32),
+            "b": jnp.zeros((*stack, d_out, r), jnp.float32)}
+
+    def merge(base, tr):
+        out = jax.tree.map(lambda x: x, base)
+        for name, ab in tr.items():
+            path = tuple(name.split("."))
+            w = _get(base, path)
+            delta = jnp.matmul(ab["b"], ab["a"])
+            m = sites[name].astype(jnp.float32)
+            _set(out, path,
+                 ((w.astype(jnp.float32) + delta) * m).astype(w.dtype))
+        return out
+
+    return _Selection(trainable=trainable, merge=merge, opt_masks=None)
+
+
+def build_selection(params, masks, spec: RecoverSpec) -> _Selection:
+    if spec.select in ("norms", "biases", "norms_biases"):
+        sel = _norm_bias_selection(params, spec.select)
+    elif spec.select == "all_masked":
+        sel = _all_masked_selection(params, masks)
+    else:
+        sel = _lora_selection(params, masks, spec)
+    if not sel.trainable:
+        raise ValueError(
+            f"select={spec.select!r} matched no params of this model "
+            "(e.g. 'biases' on an rmsnorm family) — pick another rule")
+    return sel
+
+
+# ---------------------------------------------------------------------------
+# the training step + driver
+# ---------------------------------------------------------------------------
+
+def _make_step(api: ModelApi, masks, sel: _Selection,
+               opt_cfg: adamw.AdamWConfig, *, out_shardings=None):
+    """jit'd donated-carry (base, state, batch) -> (state, metrics).
+
+    ``base`` (the frozen full tree) is an argument, not a closure
+    constant — XLA aliases it across steps instead of baking a copy of
+    the model into the executable.
+    """
+
+    def step(base, state, batch):
+        def loss_fn(tr):
+            full = sel.merge(base, tr)
+            loss, aux = api.loss(full, batch, masks=masks)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_tr, new_opt, om = adamw.update(
+            opt_cfg, grads, state.opt, state.params, masks=sel.opt_masks)
+        metrics = {"loss": loss, "ce": aux["ce"], **om}
+        return steps_lib.TrainState(new_tr, new_opt), metrics
+
+    kw = {}
+    if out_shardings is not None:
+        kw["out_shardings"] = (out_shardings, None)
+    return jax.jit(step, donate_argnums=(1,), **kw)
+
+
+def _calib_batch_fn(cfg, spec: RecoverSpec):
+    """step -> batch, on the SAME calib split/seed protocol the stats
+    accumulator consumes (``calibrate.calibration_batches``)."""
+    from repro.data import synthetic
+
+    corpus = synthetic.CorpusConfig(cfg.vocab_size, seed=spec.seed)
+    pipe = synthetic.DataPipeline(corpus, spec.batch_size, spec.seq_len,
+                                  split="calib")
+    key = jax.random.key(spec.seed)
+
+    def get(i: int) -> dict:
+        return synthetic.with_modality(pipe.get(i), cfg,
+                                       jax.random.fold_in(key, i))
+
+    return get
+
+
+def _try_resume(rdir: Path, spec: RecoverSpec, state, shardings):
+    """(start_step, state) from the newest matching recovery ckpt."""
+    step = ckpt.latest_valid(rdir)
+    if step is None:
+        return 0, state
+    man_path = rdir / f"step_{step:08d}" / "MANIFEST.json"
+    try:
+        man = json.loads(man_path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return 0, state
+    if man.get("extra", {}).get("recover_spec") != spec.fingerprint():
+        return 0, state
+    try:
+        tree, _ = ckpt.restore(rdir, step, jax.eval_shape(lambda: state),
+                               shardings=shardings)
+    except (KeyError, ValueError, OSError):
+        return 0, state
+    return min(step, spec.steps), tree
+
+
+def recover(api: ModelApi, params, masks, spec: RecoverSpec | None = None,
+            *, mesh=None, ckpt_dir=None, checkpoint_every: int = 0,
+            batches=None, verbose: bool = False) -> RecoverResult:
+    """Masked-gradient recovery of a pruned model (see module docstring).
+
+    Args:
+        params: the pruning run's weights — pass the executed report's
+            ``updated_params`` when set (sparsegpt) so recovery trains
+            on top of the refiner's updates.
+        masks: the executed plan's mask tree (``PruneReport.masks``).
+        spec: a ``RecoverSpec``; default ``RecoverSpec()``.
+        mesh: shard the train state (``dist.specs.state_pspecs``) and
+            batches (``batch_pspecs``) over the mesh.
+        ckpt_dir: the executor's checkpoint root; recovery state lives
+            under ``<ckpt_dir>/recover`` keyed by ``spec.fingerprint()``.
+        checkpoint_every: persist the TrainState every k steps (plus a
+            final save), enabling mid-recovery resume.
+        batches: optional explicit batch list (cycled); default draws
+            the spec's calibration stream.
+    """
+    spec = spec if spec is not None else RecoverSpec()
+    sel = build_selection(params, masks, spec)
+    opt_cfg = spec.opt_config()
+    state = steps_lib.TrainState(sel.trainable, adamw.init(sel.trainable))
+    trainable_count = sum(int(l.size) for l in jax.tree.leaves(sel.trainable))
+    total_count = sum(int(l.size) for l in jax.tree.leaves(params))
+
+    ctx = contextlib.nullcontext()
+    shardings = batch_fn = None
+    if mesh is not None:
+        from repro.dist import specs as specs_lib
+        from repro.launch import mesh as mesh_lib
+        ctx = mesh_lib.activate(mesh, api.cfg)
+        shardings = specs_lib.named(
+            mesh, specs_lib.state_pspecs(api.cfg, state, mesh))
+
+    get_batch = _calib_batch_fn(api.cfg, spec)
+    if batches is not None:
+        pool = list(batches)
+        get_batch = lambda i: pool[i % len(pool)]
+
+    ce_hist: list[float] = []
+    with ctx:
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        step_fn = _make_step(api, masks, sel, opt_cfg,
+                             out_shardings=shardings)
+        rdir = Path(ckpt_dir) / "recover" if ckpt_dir is not None else None
+        start = 0
+        if rdir is not None:
+            start, state = _try_resume(rdir, spec, state, shardings)
+            if verbose and start:
+                print(f"  recover: resumed at step {start}")
+
+        def save(step_no: int):
+            if rdir is None or not checkpoint_every:
+                return
+            if step_no in ckpt.steps(rdir):
+                return
+            ckpt.save(rdir, step_no, state,
+                      extra={"recover_spec": spec.fingerprint()})
+            ckpt.gc(rdir, keep=2)
+
+        for i in range(start, spec.steps):
+            batch = get_batch(i)
+            if mesh is not None:
+                from repro.dist import specs as specs_lib
+                batch = jax.device_put(batch, specs_lib.named(
+                    mesh, specs_lib.batch_pspecs(api.cfg, batch, mesh)))
+            state, m = step_fn(params, state, batch)
+            ce_hist.append(float(m["ce"]))
+            if verbose and (i % 10 == 0 or i == spec.steps - 1):
+                print(f"  recover step {i:4d}  ce {ce_hist[-1]:.4f}  "
+                      f"lr {float(m['lr']):.2e}")
+            if (i + 1) % max(checkpoint_every, 1) == 0:
+                save(i + 1)
+        if spec.steps > start:
+            save(spec.steps)
+
+    recovered = sel.merge(params, state.params)
+    return RecoverResult(
+        params=recovered, spec=spec, trainable=state.params,
+        trainable_count=trainable_count, total_count=total_count,
+        steps_run=spec.steps - start, start_step=start, ce_history=ce_hist)

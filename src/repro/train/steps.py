@@ -58,18 +58,22 @@ def train_step_fn(api: ModelApi, opt_cfg: adamw.AdamWConfig, *, masks=None):
                 (l, aux), g = grad_fn(state.params, b)
                 acc = jax.tree.map(
                     lambda a, gi: a + gi.astype(jnp.float32), acc, g)
-                return acc, (l, aux["ce"])
+                return acc, (l, aux)
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
             from repro.models import common as _common
-            grads, (losses, ces) = _common.scan(body, zeros, mb, cfg=api.cfg)
+            # the FULL aux tree rides through the scan — the accum path
+            # must report the same metric dict as the accum == 1 path
+            grads, (losses, auxes) = _common.scan(body, zeros, mb,
+                                                  cfg=api.cfg)
             grads = jax.tree.map(lambda g: g / accum, grads)
             loss = jnp.mean(losses)
-            aux = {"ce": jnp.mean(ces)}
+            aux = jax.tree.map(lambda x: jnp.mean(x, axis=0), auxes)
         new_params, new_opt, om = adamw.update(
             opt_cfg, grads, state.opt, state.params, masks=masks)
-        metrics = {"loss": loss, "ce": aux["ce"], **om}
+        metrics = {"loss": loss,
+                   **{k: v for k, v in aux.items() if k != "taps"}, **om}
         return TrainState(new_params, new_opt), metrics
 
     return step
@@ -99,21 +103,31 @@ def decode_step_fn(api: ModelApi, *, masks=None):
 
 
 def make_eval_step(api: ModelApi, *, masks=None):
+    """jit'd (params, batch) -> (mean CE, valid-token count)."""
+
     def step(params, batch):
         loss, aux = api.loss(params, batch, masks=masks)
-        return aux["ce"]
+        n_valid = jnp.sum((batch["labels"] >= 0).astype(jnp.float32))
+        return aux["ce"], n_valid
 
     return jax.jit(step)
 
 
 def perplexity(api: ModelApi, params, batches, *, masks=None) -> float:
-    """Mean-CE perplexity over an iterable of batches."""
+    """Token-weighted mean-CE perplexity over an iterable of batches.
+
+    Each batch's mean CE (already normalized over its own valid tokens)
+    is weighted by that batch's valid-token count, so ragged final
+    batches or padded prompts don't bias the estimate the way an
+    unweighted mean of per-batch means would.
+    """
     step = make_eval_step(api, masks=masks)
-    tot, n = 0.0, 0
+    tot, n = 0.0, 0.0
     for b in batches:
-        tot += float(step(params, b))
-        n += 1
-    return float(jnp.exp(tot / max(n, 1)))
+        ce, cnt = step(params, b)
+        tot += float(ce) * float(cnt)
+        n += float(cnt)
+    return float(jnp.exp(tot / max(n, 1.0)))
 
 
 def make_serve_steps(api: ModelApi, *, masks=None):

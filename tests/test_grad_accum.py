@@ -39,3 +39,55 @@ def test_accum_grad_norm_consistent():
     _, m = steps_lib.make_train_step(api, adamw.AdamWConfig(),
                                      donate=False)(state, batch)
     assert bool(jnp.isfinite(m["grad_norm"])) and float(m["grad_norm"]) > 0
+
+
+def test_accum_metric_keys_match_non_accum():
+    """The accum path must report the SAME metric dict as accum == 1 —
+    the old scan carried only "ce" and silently dropped every other aux
+    key (e.g. the MoE load-balance scalar), so accum runs lost the very
+    metrics that flag router collapse."""
+    cfg = configs.get_tiny("mixtral-8x7b")
+    api1 = models.build(cfg.replace(grad_accum=1))
+    api2 = models.build(cfg.replace(grad_accum=2))
+    params = api1.init(jax.random.key(0))
+    state = steps_lib.TrainState(params=params, opt=adamw.init(params))
+    batch = models.make_batch(cfg, 4, 16, jax.random.key(3))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+    _, m1 = steps_lib.make_train_step(api1, opt_cfg, donate=False)(state, batch)
+    _, m2 = steps_lib.make_train_step(api2, opt_cfg, donate=False)(state, batch)
+    assert set(m2) == set(m1)
+    assert "aux" in m2, "MoE load-balance aux dropped by the accum path"
+    # no numeric equality: router-balance stats are per-microbatch, so
+    # the mean over microbatches is a different (still finite) estimate
+    assert bool(jnp.isfinite(m2["aux"])) and float(m2["aux"]) >= 0
+    np.testing.assert_allclose(float(m1["ce"]), float(m2["ce"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_perplexity_is_token_weighted():
+    """perplexity() weights each batch's mean CE by its valid-token count
+    (labels >= 0), so a short ragged batch doesn't count as much as a
+    full one the way an unweighted mean of per-batch means would."""
+    cfg = configs.get_tiny("llama31-8b")
+    api = models.build(cfg)
+    params = api.init(jax.random.key(0))
+    b_full = models.make_batch(cfg, 4, 16, jax.random.key(4))
+    b_ragged = models.make_batch(cfg, 4, 16, jax.random.key(5))
+    # invalidate most of the second batch's labels: 8 valid tokens left
+    labels = np.asarray(b_ragged["labels"]).copy()
+    labels[1:] = -1
+    labels[0, 8:] = -1
+    b_ragged = dict(b_ragged, labels=jnp.asarray(labels))
+
+    step = steps_lib.make_eval_step(api)
+    ce1, n1 = (float(x) for x in step(params, b_full))
+    ce2, n2 = (float(x) for x in step(params, b_ragged))
+    assert n1 == 4 * 16 and n2 == 8, "valid-token count miscounted"
+
+    got = steps_lib.perplexity(api, params, [b_full, b_ragged])
+    want = float(np.exp((ce1 * n1 + ce2 * n2) / (n1 + n2)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # the pre-fix unweighted mean only coincides when ce1 == ce2
+    unweighted = float(np.exp((ce1 + ce2) / 2))
+    if abs(ce1 - ce2) > 1e-3:
+        assert abs(got - unweighted) > 1e-9
