@@ -17,8 +17,12 @@ ordered, the TTFT breakdown (``queue_wait`` + ``prefill``) present,
 ordered, and summing to TTFT in the mean (an exact per-request identity
 in the generator, so the means must agree to float tolerance), goodput
 ≤ offered load (an accounting invariant — delivered tokens can never
-exceed requested tokens over the same makespan), waste/shipping
-counters non-negative, and ``kernel_used`` tagged.
+exceed requested tokens over the same makespan), waste/shipping and
+robustness counters (``shed``/``expired``/``cancelled``/``evicted``)
+non-negative, and ``kernel_used`` tagged. Rows carrying an ``error``
+field (a sweep cell that raised) are tolerated but flagged as warnings
+— they must still name their cell and they never count toward the
+-wins gates.
 ``--require-continuous-wins`` additionally demands that wherever a
 (variant, arrival_rate) pair carries both modes, continuous batching's
 goodput strictly beats the fixed-batch path; ``--require-disagg-wins``
@@ -48,8 +52,14 @@ LOAD_KEYS = {"mode", "arrival_rate", "duration_s", "seed", "n_requests",
              "p99_tok_latency_s", "p50_queue_wait_s", "p99_queue_wait_s",
              "p50_prefill_s", "p99_prefill_s", "mean_ttft_s",
              "mean_queue_wait_s", "mean_prefill_s",
-             "wasted_decode_tokens", "shipped_bytes"}
+             "wasted_decode_tokens", "shipped_bytes",
+             "shed", "expired", "cancelled", "evicted"}
 LOAD_MODES = {"continuous", "fixed", "disaggregated"}
+# a sweep cell that raised records an error row instead of aborting the
+# whole bench — these identity keys must still be present so the failing
+# cell is attributable
+ERROR_ROW_KEYS = {"variant", "phase", "mode", "kernel", "arrival_rate",
+                  "error"}
 
 
 def _check_load_row(i: int, r: dict, errs: list) -> None:
@@ -78,7 +88,8 @@ def _check_load_row(i: int, r: dict, errs: list) -> None:
                     f"queue_wait {r['mean_queue_wait_s']:.6f} + prefill "
                     f"{r['mean_prefill_s']:.6f} != ttft "
                     f"{r['mean_ttft_s']:.6f} (mean)")
-    for k in ("wasted_decode_tokens", "shipped_bytes"):
+    for k in ("wasted_decode_tokens", "shipped_bytes",
+              "shed", "expired", "cancelled", "evicted"):
         if r[k] < 0:
             errs.append(f"{tag}: {k} negative ({r[k]})")
     if r["mode"] != "disaggregated" and r["shipped_bytes"] != 0:
@@ -88,14 +99,27 @@ def _check_load_row(i: int, r: dict, errs: list) -> None:
 
 def check(doc: dict, *, max_nm24_prefill_ratio: float,
           require_continuous_wins: bool = False,
-          require_disagg_wins: bool = False) -> list[str]:
+          require_disagg_wins: bool = False,
+          warnings: list | None = None) -> list[str]:
     errs = []
+    warnings = warnings if warnings is not None else []
     missing = DOC_KEYS - doc.keys()
     if missing:
         errs.append(f"doc missing keys {sorted(missing)}")
         return errs
     by, load_by = {}, {}
     for i, r in enumerate(doc["rows"]):
+        if "error" in r:
+            # tolerated-but-flagged: the cell failed, metrics are absent;
+            # it never registers for the -wins gates
+            missing = ERROR_ROW_KEYS - r.keys()
+            if missing:
+                errs.append(f"error row {i} missing {sorted(missing)}")
+            else:
+                warnings.append(
+                    f"error row {i} ({r['variant']}/{r['mode']}"
+                    f"@{r['arrival_rate']}): {r['error']}")
+            continue
         missing = ROW_KEYS - r.keys()
         if missing:
             errs.append(f"row {i} missing keys {sorted(missing)}")
@@ -198,9 +222,13 @@ def main(argv=None):
                          "better goodput at each variant's highest rate")
     args = ap.parse_args(argv)
     doc = json.loads(Path(args.path).read_text())
+    warnings: list[str] = []
     errs = check(doc, max_nm24_prefill_ratio=args.max_nm24_prefill_ratio,
                  require_continuous_wins=args.require_continuous_wins,
-                 require_disagg_wins=args.require_disagg_wins)
+                 require_disagg_wins=args.require_disagg_wins,
+                 warnings=warnings)
+    for w in warnings:
+        print(f"WARN: {w}", file=sys.stderr)
     if errs:
         for e in errs:
             print(f"FAIL: {e}", file=sys.stderr)
@@ -209,6 +237,7 @@ def main(argv=None):
     n_load = sum(1 for r in doc["rows"] if r.get("phase") == "load")
     print(f"ok: {args.path} — {n} rows ({n_load} load), schema + nm24 "
           f"prefill ratio <= {args.max_nm24_prefill_ratio}x"
+          + (f", {len(warnings)} error row(s) flagged" if warnings else "")
           + (", continuous wins" if args.require_continuous_wins else "")
           + (", disagg wins" if args.require_disagg_wins else ""))
     return 0

@@ -19,10 +19,17 @@ Each (variant, mode, arrival_rate) cell becomes one ``phase == "load"``
 row merged into ``BENCH_serve.json`` (or ``--out``) next to the
 per-phase prefill/decode rows: offered vs goodput tok/s, p50/p99 TTFT
 with its queue-wait/prefill breakdown, p50/p99 per-token latency,
-wasted decode tokens, shipped KV bytes, and the kernel the decode trace
-actually lowered. ``benchmarks/check_serve_bench.py
+wasted decode tokens, shipped KV bytes, robustness counters (shed /
+expired / cancelled / evicted), and the kernel the decode trace
+actually lowered. A cell that fails records an ``error`` row and the
+sweep continues. ``benchmarks/check_serve_bench.py
 --require-continuous-wins --require-disagg-wins`` is the acceptance
 gate on the committed doc.
+
+``--chaos`` skips the sweep and runs the deterministic fault-injection
+harness instead (``loadgen.run_chaos``): the same workload fault-free
+then under a seeded ``FaultPlan.chaos`` plan, asserting zero leaked
+pages and bitwise-equal completed token streams.
 """
 from __future__ import annotations
 
@@ -51,6 +58,15 @@ def main(argv=None):
                     help="also sweep the disaggregated prefill/decode mode")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill window (pow2) for --disaggregate")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request total deadline (simulated seconds)")
+    ap.add_argument("--queue-ttl", type=float, default=None,
+                    help="per-request queue-wait bound (simulated seconds)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="skip the load sweep; run the deterministic "
+                         "fault-injection harness instead (nonzero exit "
+                         "on leaked pages or stream mismatches)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write the bench json here instead of the repo "
                          "root (CI smoke)")
@@ -66,13 +82,15 @@ def main(argv=None):
               t_max=args.t_max, n_calib=args.n_calib, calib_seq=64,
               out_dir=td, verbose=False)
         serve(args.arch, tiny=True, batch=args.batch, masks_from=td,
-              fmt="masked", load_bench=True,
+              fmt="masked", load_bench=not args.chaos,
               load_rates=tuple(float(r) for r in args.rates.split(",")),
               load_duration=args.duration, load_seed=args.seed,
               load_prompt_len=span(args.prompt_len),
               load_output_len=span(args.output_len),
+              load_deadline=args.deadline, load_queue_ttl=args.queue_ttl,
               disaggregate=args.disaggregate,
               prefill_chunk=args.prefill_chunk,
+              chaos=args.chaos, chaos_seed=args.chaos_seed,
               bench_out=Path(args.out) if args.out else None)
 
 

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import fault_tolerance as ft
+
 
 def _tree_paths(tree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -68,8 +70,31 @@ def _slices_from_json(meta, shape) -> tuple:
     return tuple(out)
 
 
-def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None):
-    """Write one atomic checkpoint of an (optionally sharded) pytree."""
+def _write_shard(path: Path, bufs: dict) -> None:
+    with open(path, "wb") as f:
+        np.savez(f, **bufs)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _write_manifest(path: Path, manifest: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None,
+         retries: int = 3):
+    """Write one atomic checkpoint of an (optionally sharded) pytree.
+
+    Every host-side I/O step (shard writes, manifest, the atomic
+    publish rename) runs under ``runtime.fault_tolerance.retry`` — a
+    transient ``OSError`` from a flaky filesystem is retried with
+    backoff instead of aborting a multi-hour run at its final rename.
+    A persistent failure still raises, and the .tmp dir is removed so
+    no partial checkpoint is ever visible.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
@@ -95,16 +120,12 @@ def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None):
                 })
             manifest["leaves"].append(entry)
         for fname, bufs in shard_bufs.items():
-            with open(tmp / fname, "wb") as f:
-                np.savez(f, **bufs)
-                f.flush()
-                os.fsync(f.fileno())
-        mpath = tmp / "MANIFEST.json"
-        with open(mpath, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, final)     # atomic publish
+            ft.retry(_write_shard, tmp / fname, bufs,
+                     retries=retries, base_delay=0.05, max_delay=1.0)
+        ft.retry(_write_manifest, tmp / "MANIFEST.json", manifest,
+                 retries=retries, base_delay=0.05, max_delay=1.0)
+        ft.retry(os.replace, tmp, final,          # atomic publish
+                 retries=retries, base_delay=0.05, max_delay=1.0)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise

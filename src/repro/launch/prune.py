@@ -190,6 +190,7 @@ def prune(arch: str, *, tiny: bool = True, pattern="0.6",
                 "trainable_frac": rec_res.trainable_frac,
                 "steps_run": rec_res.steps_run,
                 "start_step": rec_res.start_step,
+                "diverged": rec_res.diverged,
                 "ce_start": rec_res.ce_history[0] if rec_res.ce_history
                 else None,
                 "ce_end": rec_res.ce_history[-1] if rec_res.ce_history

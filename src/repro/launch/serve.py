@@ -48,7 +48,11 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
           sample=None, load_bench: bool = False, load_rates=(16.0, 128.0),
           load_duration: float = 2.0, load_seed: int = 0,
           load_prompt_len=(8, 24), load_output_len=(4, 16),
+          load_deadline: float | None = None,
+          load_queue_ttl: float | None = None, load_shed: bool = False,
+          load_max_queue: int | None = None,
           disaggregate: bool = False, prefill_chunk: int | None = None,
+          chaos: bool = False, chaos_seed: int = 0,
           verbose: bool = True) -> dict:
     """Serve a batch of prompts; returns tokens + timing (+ bench rows).
 
@@ -65,6 +69,15 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
     sweep mode: prefill into its own page pool, ship sessions to the
     decode pool on join (``prefill_chunk`` sets the chunked-prefill
     window width for that mode).
+
+    Robustness knobs: ``load_deadline``/``load_queue_ttl`` bound each
+    request's total lifetime / queue wait on the simulated clock;
+    ``load_shed`` returns typed ``Rejected`` instead of raising when
+    the queue is full; ``load_max_queue`` caps the queue. ``chaos``
+    runs the deterministic fault-injection harness
+    (``loadgen.run_chaos`` with ``FaultPlan.chaos(chaos_seed)``) and
+    exits nonzero if any fault path leaks pages or perturbs a
+    completed token stream.
     """
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
     api = models.build(cfg)
@@ -137,16 +150,22 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
             duration_s=load_duration, seed=load_seed,
             prompt_len=tuple(load_prompt_len),
             output_len=tuple(load_output_len),
-            sampling=sample if sample is not None else GREEDY)
+            sampling=sample if sample is not None else GREEDY,
+            deadline_s=load_deadline, queue_ttl_s=load_queue_ttl)
         modes = ("continuous", "fixed")
         if disaggregate:
             modes += ("disaggregated",)
+        sched_kw = {}
+        if load_shed:
+            sched_kw["admission"] = "shed"
+        if load_max_queue is not None:
+            sched_kw["max_queue"] = load_max_queue
         load_rows = loadgen.bench_load_rows(
             api, params, mask_src,
             formats=_servable(formats, api, params_srv, mask_src),
             rates=tuple(load_rates), load=load_cfg, kernel=kernel,
             mesh=mesh_obj, masked_params=params_srv, max_batch=batch,
-            modes=modes, prefill_chunk=prefill_chunk)
+            modes=modes, prefill_chunk=prefill_chunk, **sched_kw)
         path = bench_out or BENCH_OUT
         doc = json.loads(path.read_text()) if path.exists() else {
             "arch": arch, "batch": batch, "prompt_len": prompt_len,
@@ -165,6 +184,30 @@ def serve(arch: str, *, tiny: bool = True, batch: int = 4,
                       f"{r['wasted_decode_tokens']:5d}  "
                       f"[{r['kernel_used']}]")
             print(f"wrote {path}")
+
+    if chaos:
+        from repro.serve import FaultPlan, loadgen
+        from repro.serve.sampling import GREEDY
+        chaos_cfg = loadgen.LoadConfig(
+            arrival_rate=float(load_rates[0]), duration_s=load_duration,
+            seed=load_seed, prompt_len=tuple(load_prompt_len),
+            output_len=tuple(load_output_len),
+            sampling=sample if sample is not None else GREEDY)
+        workload = loadgen.make_workload(chaos_cfg)
+        plan = FaultPlan.chaos(chaos_seed)
+        verdict = loadgen.run_chaos(engine, workload, plan,
+                                    max_batch=batch)
+        out["chaos"] = verdict
+        if verbose:
+            print(f"chaos [{verdict['plan']}]: "
+                  f"{verdict['completed_faulted']}/{verdict['n_requests']} "
+                  f"completed, leaked {verdict['leaked_bytes']} B, "
+                  f"{verdict['stream_mismatches']} stream mismatches, "
+                  f"fired {verdict['faults_fired']}, "
+                  f"counters {verdict['counters']}")
+            print("chaos verdict:", "OK" if verdict["ok"] else "FAILED")
+        if not verdict["ok"]:
+            raise SystemExit(1)
     return out
 
 
@@ -221,12 +264,28 @@ def main(argv=None):
                     help="uniform prompt-length bounds for the workload")
     ap.add_argument("--load-output-len", default="4:16", metavar="MIN:MAX",
                     help="uniform output-length bounds for the workload")
+    ap.add_argument("--load-deadline", type=float, default=None,
+                    help="per-request total-lifetime deadline (simulated "
+                         "seconds); expiries are counted, not served late")
+    ap.add_argument("--load-queue-ttl", type=float, default=None,
+                    help="per-request queue-wait bound (simulated seconds)")
+    ap.add_argument("--load-shed", action="store_true",
+                    help="shed (typed Rejected) instead of raising when "
+                         "the admission queue is full")
+    ap.add_argument("--load-max-queue", type=int, default=None,
+                    help="admission queue cap for the load sweep")
     ap.add_argument("--disaggregate", action="store_true",
                     help="add the disaggregated prefill/decode mode to "
                          "the load sweep (separate pools, page shipping)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill window width (power of two) for "
                          "the disaggregated mode")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the deterministic fault-injection harness "
+                         "(fault-free vs faulted pass) and exit nonzero "
+                         "on leaked pages or stream mismatches")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for FaultPlan.chaos")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     from repro.serve.sampling import parse_sample_flag
@@ -242,7 +301,11 @@ def main(argv=None):
           load_duration=args.load_duration, load_seed=args.load_seed,
           load_prompt_len=span(args.load_prompt_len),
           load_output_len=span(args.load_output_len),
-          disaggregate=args.disaggregate, prefill_chunk=args.prefill_chunk)
+          load_deadline=args.load_deadline,
+          load_queue_ttl=args.load_queue_ttl, load_shed=args.load_shed,
+          load_max_queue=args.load_max_queue,
+          disaggregate=args.disaggregate, prefill_chunk=args.prefill_chunk,
+          chaos=args.chaos, chaos_seed=args.chaos_seed)
 
 
 if __name__ == "__main__":

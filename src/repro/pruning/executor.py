@@ -33,6 +33,7 @@ import numpy as np
 
 from repro import ckpt
 from repro.core import masks as masks_lib
+from repro.runtime import fault_tolerance as ft
 from repro.models import ModelApi
 
 from . import engine as engine_lib
@@ -295,9 +296,12 @@ class PruneExecutor:
         # step — publish past it, then drop everything but the newest
         existing = ckpt.steps(gdir)
         step = index if not existing else max(max(existing) + 1, index)
-        ckpt.save(gdir, step, tree,
-                  extra={"rule": _rule_tag(pg), "data": fingerprint,
-                         "engine_path": pg.engine_path})
+        # a transient OSError here would otherwise abort a multi-hour run
+        # after the group's refinement already finished — retry with backoff
+        ft.retry(ckpt.save, gdir, step, tree,
+                 retries=3, base_delay=0.05, max_delay=1.0,
+                 extra={"rule": _rule_tag(pg), "data": fingerprint,
+                        "engine_path": pg.engine_path})
         ckpt.gc(gdir, keep=1)
 
     # -- execution ----------------------------------------------------------

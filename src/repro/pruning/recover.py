@@ -36,6 +36,7 @@ import contextlib
 import dataclasses
 import hashlib
 import json
+import math
 from pathlib import Path
 
 import jax
@@ -150,6 +151,9 @@ class RecoverResult:
     steps_run: int                # steps executed THIS call (post-resume)
     start_step: int               # where resume picked up (0 = fresh)
     ce_history: list              # per-step mean CE, this call only
+    diverged: bool = False        # non-finite loss halted the run; params
+                                  # are the last checkpoint (or the base
+                                  # tree untouched), never the NaN state
 
     @property
     def trainable_frac(self) -> float:
@@ -399,6 +403,8 @@ def recover(api: ModelApi, params, masks, spec: RecoverSpec | None = None,
                       extra={"recover_spec": spec.fingerprint()})
             ckpt.gc(rdir, keep=2)
 
+        diverged = False
+        steps_run = 0
         for i in range(start, spec.steps):
             batch = get_batch(i)
             if mesh is not None:
@@ -406,17 +412,46 @@ def recover(api: ModelApi, params, masks, spec: RecoverSpec | None = None,
                 batch = jax.device_put(batch, specs_lib.named(
                     mesh, specs_lib.batch_pspecs(api.cfg, batch, mesh)))
             state, m = step_fn(params, state, batch)
-            ce_hist.append(float(m["ce"]))
+            ce = float(m["ce"])
+            if not math.isfinite(ce):
+                # divergence guard: never splice a NaN/Inf state into
+                # updated_params — halt and fall back below
+                diverged = True
+                if verbose:
+                    print(f"  recover: non-finite ce at step {i} — halting")
+                break
+            ce_hist.append(ce)
+            steps_run += 1
             if verbose and (i % 10 == 0 or i == spec.steps - 1):
                 print(f"  recover step {i:4d}  ce {ce_hist[-1]:.4f}  "
                       f"lr {float(m['lr']):.2e}")
             if (i + 1) % max(checkpoint_every, 1) == 0:
                 save(i + 1)
-        if spec.steps > start:
+        if not diverged and spec.steps > start:
             save(spec.steps)
+
+        restored = False
+        if diverged and rdir is not None:
+            # roll back to the newest fingerprint-matched checkpoint; the
+            # poisoned in-flight state is discarded either way
+            s2, state2 = _try_resume(rdir, spec, state, shardings)
+            if s2 > 0:
+                state, restored = state2, True
+                if verbose:
+                    print(f"  recover: restored checkpoint at step {s2}")
+
+    if diverged and not restored:
+        # no good checkpoint to fall back to: report the base tree
+        # unchanged rather than garbage
+        return RecoverResult(
+            params=params, spec=spec, trainable={},
+            trainable_count=trainable_count, total_count=total_count,
+            steps_run=steps_run, start_step=start, ce_history=ce_hist,
+            diverged=True)
 
     recovered = sel.merge(params, state.params)
     return RecoverResult(
         params=recovered, spec=spec, trainable=state.params,
         trainable_count=trainable_count, total_count=total_count,
-        steps_run=spec.steps - start, start_step=start, ce_history=ce_hist)
+        steps_run=steps_run, start_step=start, ce_history=ce_hist,
+        diverged=diverged)

@@ -1,10 +1,13 @@
 """Sparse serving runtime: engine (compiled step fns), scheduler
-(continuous batching), kvcache (paged session storage), sampling."""
+(continuous batching), kvcache (paged session storage), sampling,
+faultinject (deterministic chaos plans for robustness testing)."""
 from .engine import FORMATS, ServeEngine, ServeResult, bench_rows, next_pow2
-from .kvcache import PagedKVCache
+from .faultinject import FaultInjector, FaultPlan, ShipFault
+from .kvcache import HostSpill, PagedKVCache
 from .sampling import GREEDY, SamplingParams
-from .scheduler import Completion, ContinuousScheduler, StepEvents
+from .scheduler import Completion, ContinuousScheduler, Rejected, StepEvents
 
 __all__ = ["FORMATS", "ServeEngine", "ServeResult", "bench_rows",
-           "next_pow2", "PagedKVCache", "SamplingParams", "GREEDY",
-           "ContinuousScheduler", "Completion", "StepEvents"]
+           "next_pow2", "PagedKVCache", "HostSpill", "SamplingParams",
+           "GREEDY", "ContinuousScheduler", "Completion", "StepEvents",
+           "Rejected", "FaultPlan", "FaultInjector", "ShipFault"]

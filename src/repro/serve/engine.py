@@ -127,6 +127,11 @@ class ServeEngine:
         # per-phase kernel actually lowered at trace time ("dense" for the
         # unpacked formats, else e.g. "jnp" / "pallas" / "jnp(vmem)")
         self.kernel_used: dict = {}
+        # fault-injection seam: called as hook(phase) inside the timed
+        # dispatch region of every scheduler-facing entry point, so an
+        # injected slow step lands in the measured lane time exactly
+        # like a real straggler (serve.faultinject)
+        self.dispatch_hook = None
 
         if mesh is not None:
             pspecs = specs_lib.param_pspecs(self.cfg, self.params, mesh)
@@ -368,6 +373,8 @@ class ServeEngine:
 
             self._fns[key] = jax.jit(fn)
         with self._ctx(), common.use_matmul_policy(self._policy):
+            if self.dispatch_hook is not None:
+                self.dispatch_hook("prefill")
             with spmm.record_dispatch() as rec:
                 out = self._fns[key](self.params, tokens,
                                      jnp.int32(n_valid), samp)
@@ -415,6 +422,8 @@ class ServeEngine:
 
             self._fns[key] = jax.jit(fn, donate_argnums=4)
         with self._ctx(), common.use_matmul_policy(self._policy):
+            if self.dispatch_hook is not None:
+                self.dispatch_hook("prefill")
             with spmm.record_dispatch() as rec:
                 tok0, cache = self._fns[key](
                     self.params, tokens, jnp.int32(offset),
@@ -477,6 +486,8 @@ class ServeEngine:
 
             self._fns[key] = jax.jit(fn, donate_argnums=2)
         with self._ctx(), common.use_matmul_policy(self._policy):
+            if self.dispatch_hook is not None:
+                self.dispatch_hook("decode")
             with spmm.record_dispatch() as rec:
                 toks, cache = self._fns[key](self.params, tok, cache,
                                              active, samp)

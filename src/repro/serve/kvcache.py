@@ -48,6 +48,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import common
 
@@ -59,6 +60,28 @@ class Session:
     pages: list[int]
     length: int = 0                   # real tokens stored (cache positions)
     reserved: int = 0                 # tokens the pages can hold
+
+
+@dataclasses.dataclass
+class HostSpill:
+    """A session evicted to host memory, page-granular and exact.
+
+    ``k``/``v`` are the scratch-padded page blocks a ``load`` of the
+    session would gather — fixed slot-width numpy arrays, so
+    ``restore_spill`` replays the same compiled scatter ``store`` uses
+    and the round trip is bitwise. ``length`` is the real token count;
+    padding pages beyond ``pages_for(length)`` carry garbage and land on
+    the scratch page on restore.
+    """
+
+    sid: object
+    length: int
+    k: np.ndarray
+    v: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -128,6 +151,14 @@ class PagedKVCache:
         # bytes that left / entered this pool, scratch padding excluded
         self.shipped_bytes_out = 0
         self.shipped_bytes_in = 0
+        # host-spill accounting (see ``spill``/``restore_spill``)
+        self.spilled_bytes_out = 0
+        self.spilled_bytes_in = 0
+        # fault-injection seam: called as hook(pool, need_pages) before
+        # any reservation that would actually take pages; an injected
+        # MemoryError here is indistinguishable from real exhaustion to
+        # callers, which is the point (serve.faultinject)
+        self.fault_hook = None
 
     # -- accounting ---------------------------------------------------------
 
@@ -188,6 +219,8 @@ class PagedKVCache:
 
     def _reserve(self, sess: Session, n_tokens: int) -> None:
         need = self.pages_for(n_tokens) - len(sess.pages)
+        if need > 0 and self.fault_hook is not None:
+            self.fault_hook(self, need)
         if need > len(self._free):
             raise MemoryError(
                 f"paged KV cache exhausted: need {need} pages, "
@@ -271,6 +304,47 @@ class PagedKVCache:
         k, v, pos = _gather_pages(self.k, self.v, pids,
                                   jnp.int32(sess.length))
         return k, v, pos, sess.length
+
+    # -- host spill (eviction under page pressure) --------------------------
+
+    def spill(self, sid, *, capacity: int) -> HostSpill:
+        """Evict ``sid`` to host memory and free its pages.
+
+        The gather is the same fixed-shape scratch-padded page indexing
+        ``load`` uses, pulled to host as numpy — so spill→restore→load
+        round-trips bitwise, and one program per slot width serves every
+        session regardless of page count. The session disappears from
+        the pool (its pages return to the free list) until
+        ``restore_spill`` re-admits it.
+        """
+        sess = self._table[sid]
+        pids = self._padded_pids(sess, sess.length, capacity)
+        k = np.asarray(self.k[:, pids])
+        v = np.asarray(self.v[:, pids])
+        out = HostSpill(sid=sid, length=sess.length, k=k, v=v)
+        self.spilled_bytes_out += self.pages_for(sess.length) * self.page_bytes
+        self.free(sid)
+        return out
+
+    def restore_spill(self, spill: HostSpill, *, sid=None) -> None:
+        """Re-admit a spilled session; raises MemoryError before mutation.
+
+        Allocates exactly ``pages_for(spill.length)`` pages (callers
+        growing the session for further decode extend it afterwards) and
+        scatters the host block back through the scratch-padded path —
+        the padding pages land on the scratch page and are discarded.
+        """
+        sid = spill.sid if sid is None else sid
+        self.alloc(sid, spill.length)        # raises before any mutation
+        sess = self._table[sid]
+        pids = jnp.asarray(
+            sess.pages + [self.scratch_page] * (spill.k.shape[1]
+                                                - len(sess.pages)),
+            jnp.int32)
+        kp, vp = self._place(jnp.asarray(spill.k), jnp.asarray(spill.v))
+        self.k, self.v = _scatter_pages(self.k, self.v, kp, vp, pids)
+        sess.length = int(spill.length)
+        self.spilled_bytes_in += self.pages_for(spill.length) * self.page_bytes
 
     # -- defrag -------------------------------------------------------------
 

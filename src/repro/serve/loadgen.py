@@ -46,8 +46,9 @@ import time
 import numpy as np
 
 from .engine import ServeEngine, next_pow2
+from .faultinject import FaultPlan
 from .sampling import GREEDY, SamplingParams
-from .scheduler import ContinuousScheduler
+from .scheduler import ContinuousScheduler, Rejected
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +62,11 @@ class LoadConfig:
     output_len: tuple = (4, 16)
     sampling: SamplingParams = GREEDY
     vocab_size: int = 256
+    # per-request lifecycle bounds on the SIMULATED clock (None = off):
+    # deadline_s caps a request's total lifetime, queue_ttl_s its queue
+    # wait — expiries are counted in the bench row, not served late
+    deadline_s: float | None = None
+    queue_ttl_s: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +93,8 @@ def make_workload(cfg: LoadConfig) -> list:
 
 
 def _metrics(workload, first_t, done_t, done_new, arrivals, makespan, *,
-             start_t=None, wasted: int = 0, shipped: int = 0):
+             start_t=None, wasted: int = 0, shipped: int = 0,
+             counters: dict | None = None):
     """Fold raw timestamps into the bench-row metric dict.
 
     ``start_t`` stamps when each request's prefill began, splitting TTFT
@@ -97,9 +104,12 @@ def _metrics(workload, first_t, done_t, done_new, arrivals, makespan, *,
     ``mean_ttft == mean_queue_wait + mean_prefill`` holds to float
     precision. ``wasted`` counts decode steps dispatched past request
     budgets (discarded tokens); ``shipped`` counts KV bytes that crossed
-    pools (0 outside disaggregated mode).
+    pools (0 outside disaggregated mode). ``counters`` carries the
+    scheduler's robustness tallies (shed / expired / cancelled /
+    evicted) — zeros for drivers that have none (fixed batch).
     """
     start_t = start_t or {}
+    c = counters or {}
     offered = sum(r.max_new for r in workload)
     delivered = sum(done_new.values())
     rids = sorted(first_t)
@@ -129,11 +139,16 @@ def _metrics(workload, first_t, done_t, done_new, arrivals, makespan, *,
         "p99_tok_latency_s": pct(per_tok, 99),
         "wasted_decode_tokens": int(wasted),
         "shipped_bytes": int(shipped),
+        "shed": int(c.get("shed", 0)),
+        "expired": int(c.get("expired", 0)),
+        "cancelled": int(c.get("cancelled", 0)),
+        "evicted": int(c.get("evicted", 0)),
     }
 
 
 def run_continuous(engine: ServeEngine, workload: list, *,
-                   warmup: bool = True, **sched_kw) -> dict:
+                   warmup: bool = True, deadline_s: float | None = None,
+                   queue_ttl_s: float | None = None, **sched_kw) -> dict:
     """Drive a ``ContinuousScheduler`` through the workload.
 
     **Two-lane clock (disaggregated mode).** With ``disaggregate=True``
@@ -152,7 +167,12 @@ def run_continuous(engine: ServeEngine, workload: list, *,
     disagg = bool(sched_kw.get("disaggregate", False))
 
     def one_pass() -> dict:
-        sch = ContinuousScheduler(engine, **sched_kw)
+        now, p_now, i, wasted = 0.0, 0.0, 0, 0
+        # deadlines/TTLs live on the SIMULATED timeline: the scheduler
+        # reads this closure instead of the wall clock, so an expiry
+        # means the virtual deployment missed it, not that the harness
+        # was slow
+        sch = ContinuousScheduler(engine, clock=lambda: now, **sched_kw)
         # Pre-compile every (chunk length, row bucket) decode program the
         # scheduler can dispatch. Without this, a combination first hit
         # mid-run (the timed pass's virtual clock diverges from the warm
@@ -161,13 +181,16 @@ def run_continuous(engine: ServeEngine, workload: list, *,
         # p99 TTFT outlier that is a harness artifact, not queueing.
         sch.warm()
         arrivals, start_t, first_t, done_t, done_new = {}, {}, {}, {}, {}
-        now, p_now, i, wasted = 0.0, 0.0, 0, 0
         while i < len(workload) or not sch.idle:
             while i < len(workload) and workload[i].arrival <= now:
                 r = workload[i]
-                rid = sch.submit(r.prompt, r.max_new, sampling=r.sampling)
-                arrivals[rid] = r.arrival
+                rid = sch.submit(r.prompt, r.max_new, sampling=r.sampling,
+                                 deadline_s=deadline_s,
+                                 queue_ttl_s=queue_ttl_s)
                 i += 1
+                if isinstance(rid, Rejected):
+                    continue             # shed: never arrives, never waits
+                arrivals[rid] = r.arrival
             if sch.idle and i < len(workload):
                 now = workload[i].arrival        # jump an idle gap
                 continue
@@ -198,7 +221,7 @@ def run_continuous(engine: ServeEngine, workload: list, *,
                 done_new[c.rid] = c.n_new
         return _metrics(workload, first_t, done_t, done_new, arrivals,
                         max(now, p_now), start_t=start_t, wasted=wasted,
-                        shipped=sch.shipped_bytes)
+                        shipped=sch.shipped_bytes, counters=sch.counters)
 
     if warmup:
         one_pass()                               # compile pass
@@ -258,6 +281,79 @@ def run_fixed(engine: ServeEngine, workload: list, *, batch: int = 8,
     return one_pass()
 
 
+def run_chaos(engine: ServeEngine, workload: list,
+              faults: FaultPlan, *, submit_per_step: int = 2,
+              **sched_kw) -> dict:
+    """The chaos harness: same workload fault-free then under ``faults``.
+
+    Both passes run at the pinned batch width (``bucket_batch=False``,
+    the bitwise-repro mode) with requests fed ``submit_per_step`` per
+    scheduler step in the same order, so rids align across passes. The
+    verdict the chaos CI gate asserts:
+
+    * ``leaked_bytes == 0`` — after the faulted pass drains (or goes
+      idle) and ``shutdown()`` runs, both pools hold zero pages: no
+      fault path (injected exhaustion, failed ship, eviction, SIGTERM)
+      leaked a page.
+    * ``stream_mismatches == 0`` — every request the faulted pass
+      completed produced a token stream bitwise equal to the fault-free
+      pass (evict→restore→resume and ship-retry are exact replays under
+      the positional PRNG).
+
+    Returns the verdict plus the faulted pass's counters and the
+    injector's fired-fault log (``faults_fired``) so a quiet plan —
+    faults scheduled after the run went idle — is visible, not a
+    silently green gate.
+    """
+    sched_kw.setdefault("bucket_batch", False)
+
+    def drive(plan):
+        sch = ContinuousScheduler(engine, faults=plan, **sched_kw)
+        sch.warm()
+        streams, i = {}, 0
+        for _ in range(100_000):
+            if i >= len(workload) and (sch.idle or sch.drained):
+                break
+            if not sch.draining:
+                for _ in range(submit_per_step):
+                    if i >= len(workload):
+                        break
+                    r = workload[i]
+                    sch.submit(r.prompt, r.max_new, sampling=r.sampling)
+                    i += 1
+            elif sch.drained:
+                break                    # preempted: queued work stays
+            ev = sch.step()
+            for c in ev.completed:
+                streams[c.rid] = np.asarray(c.tokens)
+        else:
+            raise RuntimeError("chaos drive did not converge")
+        sch.shutdown()                   # spills kept sessions (none here)
+        engine.dispatch_hook = None      # engine outlives this scheduler
+        leaked = sch.pool.used_bytes + (
+            sch.prefill_pool.used_bytes if sch.prefill_pool else 0)
+        fired = list(sch._injector.log) if sch._injector else []
+        return streams, leaked, dict(sch.counters), fired
+
+    base, base_leak, _, _ = drive(None)
+    got, leaked, counters, fired = drive(faults)
+    mismatches = [int(rid) for rid, toks in got.items()
+                  if not np.array_equal(toks, base.get(rid))]
+    return {
+        "plan": faults.describe(),
+        "n_requests": len(workload),
+        "completed_clean": len(base),
+        "completed_faulted": len(got),
+        "leaked_bytes_clean": int(base_leak),
+        "leaked_bytes": int(leaked),
+        "stream_mismatches": len(mismatches),
+        "mismatched_rids": mismatches,
+        "faults_fired": [list(x) for x in fired],
+        "counters": counters,
+        "ok": leaked == 0 and base_leak == 0 and not mismatches,
+    }
+
+
 def bench_load_rows(api, params, mask_src, *, formats=("masked",),
                     rates=(8.0,), load: LoadConfig | None = None,
                     kernel: str = "auto", mesh=None,
@@ -271,6 +367,11 @@ def bench_load_rows(api, params, mask_src, *, formats=("masked",),
     ``disaggregate=True`` (plus ``prefill_chunk`` when given — the
     chunked-prefill window applies to that mode only, so the
     "continuous" rows stay the single-pool interleaved baseline).
+
+    A cell that raises does NOT abort the sweep: the row records the
+    failure under ``"error"`` (with the usual identity keys so the
+    checker can still place it) and the remaining cells run — one bad
+    (variant, rate) combination no longer costs the whole artifact.
     """
     load = load or LoadConfig()
     max_batch = sched_kw.get("max_batch", 8)
@@ -278,21 +379,38 @@ def bench_load_rows(api, params, mask_src, *, formats=("masked",),
     for fmt in formats:
         p = params if fmt == "dense" or masked_params is None \
             else masked_params
-        eng = ServeEngine(api, p, masks=mask_src if fmt != "dense" else None,
-                          fmt=fmt, kernel=kernel, mesh=mesh)
+        try:
+            eng = ServeEngine(api, p,
+                              masks=mask_src if fmt != "dense" else None,
+                              fmt=fmt, kernel=kernel, mesh=mesh)
+        except Exception as e:  # noqa: BLE001 — sweep must survive a cell
+            for rate in rates:
+                for mode in modes:
+                    rows.append(_error_row(fmt, mode, rate, load, kernel, e))
+            continue
         for rate in rates:
             wl = make_workload(dataclasses.replace(
                 load, arrival_rate=rate, vocab_size=api.cfg.vocab_size))
             for mode in modes:
-                if mode == "continuous":
-                    m = run_continuous(eng, wl, **sched_kw)
-                elif mode == "disaggregated":
-                    kw = dict(sched_kw, disaggregate=True)
-                    if prefill_chunk is not None:
-                        kw["prefill_chunk"] = prefill_chunk
-                    m = run_continuous(eng, wl, **kw)
-                else:
-                    m = run_fixed(eng, wl, batch=max_batch)
+                try:
+                    if mode == "continuous":
+                        m = run_continuous(eng, wl,
+                                           deadline_s=load.deadline_s,
+                                           queue_ttl_s=load.queue_ttl_s,
+                                           **sched_kw)
+                    elif mode == "disaggregated":
+                        kw = dict(sched_kw, disaggregate=True)
+                        if prefill_chunk is not None:
+                            kw["prefill_chunk"] = prefill_chunk
+                        m = run_continuous(eng, wl,
+                                           deadline_s=load.deadline_s,
+                                           queue_ttl_s=load.queue_ttl_s,
+                                           **kw)
+                    else:
+                        m = run_fixed(eng, wl, batch=max_batch)
+                except Exception as e:  # noqa: BLE001
+                    rows.append(_error_row(fmt, mode, rate, load, kernel, e))
+                    continue
                 rows.append({
                     "variant": fmt, "phase": "load", "mode": mode,
                     "kernel": kernel if fmt in ("nm24", "gathered")
@@ -304,6 +422,17 @@ def bench_load_rows(api, params, mask_src, *, formats=("masked",),
                     **m,
                 })
     return rows
+
+
+def _error_row(fmt, mode, rate, load: LoadConfig, kernel, exc) -> dict:
+    """A failed sweep cell: identity keys + the error, no metrics."""
+    return {
+        "variant": fmt, "phase": "load", "mode": mode,
+        "kernel": kernel if fmt in ("nm24", "gathered") else "dense",
+        "arrival_rate": rate, "duration_s": load.duration_s,
+        "seed": load.seed,
+        "error": f"{type(exc).__name__}: {exc}",
+    }
 
 
 def merge_load_rows(doc: dict, rows: list) -> dict:

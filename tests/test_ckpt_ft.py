@@ -60,6 +60,37 @@ def test_restore_hash_check_raises(tmp_path, tree):
         ckpt.restore(tmp_path, 1, jax.eval_shape(lambda: tree))
 
 
+def test_save_retries_transient_rename_failure(tmp_path, tree,
+                                               monkeypatch):
+    """A flaky filesystem failing the atomic publish twice does not
+    abort the save — ``ft.retry`` re-drives it and the checkpoint
+    restores bitwise."""
+    from repro.ckpt import store
+    real_replace, fails = os.replace, []
+
+    def flaky_replace(src, dst):
+        if len(fails) < 2:
+            fails.append(1)
+            raise OSError("transient rename failure")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(store.os, "replace", flaky_replace)
+    ckpt.save(tmp_path, 9, tree)
+    assert len(fails) == 2
+    assert ckpt.latest_valid(tmp_path) == 9
+    got, _ = ckpt.restore(tmp_path, 9, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a persistent failure still raises and leaves no partial ckpt
+    monkeypatch.setattr(store.os, "replace",
+                        lambda s, d: (_ for _ in ()).throw(
+                            OSError("permanent")))
+    with pytest.raises(OSError, match="permanent"):
+        ckpt.save(tmp_path, 10, tree, retries=1)
+    assert ckpt.steps(tmp_path) == [9]
+    assert not list(tmp_path.glob("*.tmp-*"))
+
+
 def test_gc_keeps_newest(tmp_path, tree):
     for s in (1, 2, 3, 4, 5):
         ckpt.save(tmp_path, s, tree)

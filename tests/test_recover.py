@@ -195,6 +195,86 @@ def test_recover_ckpt_resume_bitwise(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# divergence guard
+# ---------------------------------------------------------------------------
+
+def _nan_step_after(n_calls: int):
+    """A ``_make_step`` wrapper whose step turns divergent (NaN ce AND a
+    NaN-poisoned train state) from the ``n_calls``-th call on — if the
+    guard ever spliced the in-flight state, the result would carry the
+    NaNs."""
+    import importlib
+    recover_mod = importlib.import_module("repro.pruning.recover")
+    real_make = recover_mod._make_step
+
+    def make(api, masks, sel, opt_cfg, *, out_shardings=None):
+        step = real_make(api, masks, sel, opt_cfg,
+                         out_shardings=out_shardings)
+        calls = [0]
+
+        def wrapped(base, state, batch):
+            state, m = step(base, state, batch)
+            calls[0] += 1
+            if calls[0] >= n_calls:
+                state = jax.tree.map(lambda x: x * jnp.nan, state)
+                m = {**m, "ce": jnp.asarray(jnp.nan)}
+            return state, m
+
+        return wrapped
+
+    return make
+
+
+def _assert_all_finite(tree, what):
+    for name, leaf in _flat_leaves(tree):
+        assert np.isfinite(np.asarray(leaf, np.float64)).all(), \
+            f"{what}: non-finite values in {name}"
+
+
+def test_recover_divergence_restores_last_checkpoint(tmp_path,
+                                                     monkeypatch):
+    """NaN loss mid-run halts recovery and rolls back to the newest
+    fingerprint-keyed checkpoint instead of splicing the poisoned
+    state."""
+    import importlib
+    recover_mod = importlib.import_module("repro.pruning.recover")
+    cfg, api, params, masks = _prune("llama31-8b")
+    mp = adamw.apply_masks(params, masks)
+    spec = RecoverSpec(select="norms_biases", steps=6, lr=5e-3,
+                       batch_size=2, seq_len=32)
+    monkeypatch.setattr(recover_mod, "_make_step", _nan_step_after(5))
+    res = recover_mod.recover(api, mp, masks, spec, ckpt_dir=tmp_path,
+                              checkpoint_every=2)
+    assert res.diverged
+    assert res.steps_run == 4 and len(res.ce_history) == 4
+    _assert_all_finite(res.params, "restored recovery")
+    _assert_all_finite(res.trainable, "restored trainable")
+    # it really is the step-4 checkpoint: the trained leaves moved
+    before = dict(_flat_leaves(mp))
+    assert any(not np.array_equal(np.asarray(before[n]), np.asarray(l))
+               for n, l in _flat_leaves(res.params))
+
+
+def test_recover_divergence_without_ckpt_returns_base(monkeypatch):
+    """No checkpoint to fall back to: the base tree comes back
+    untouched (diverged=True), never the NaN state."""
+    import importlib
+    recover_mod = importlib.import_module("repro.pruning.recover")
+    cfg, api, params, masks = _prune("llama31-8b")
+    mp = adamw.apply_masks(params, masks)
+    spec = RecoverSpec(select="norms_biases", steps=4, lr=5e-3,
+                       batch_size=2, seq_len=32)
+    monkeypatch.setattr(recover_mod, "_make_step", _nan_step_after(2))
+    res = recover_mod.recover(api, mp, masks, spec)
+    assert res.diverged and res.trainable == {}
+    assert res.steps_run == 1
+    for (name, a), (_, b) in zip(_flat_leaves(mp),
+                                 _flat_leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
 # recover -> export_packed -> ServeEngine splice
 # ---------------------------------------------------------------------------
 

@@ -214,7 +214,7 @@ def test_small_request_overtakes_page_starved_head(tiny):
     small = sch.submit(_prompt(8, seed=2), 4)   # 16 tokens = 2 pages: fits
     ev = sch.step()
     assert small in ev.prefill_started and big not in ev.prefill_started
-    assert sch.queue and sch.queue[0][0] == big  # head keeps its place
+    assert sch.queue and sch.queue[0].rid == big  # head keeps its place
     done = sch.run_until_idle()              # A drains -> big admitted
     assert set(done) >= {a, big, small}
     assert done[big].n_new == 16
